@@ -1,0 +1,29 @@
+"""Fig 8: DL I/O kernels (BERT / Megatron-DeepSpeed via DLIO patterns).
+
+Bursty, small, sample-oriented reads with prefetch threads — unseen by the
+training data. The paper reports up to 1.75x over default.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_scenario, timed
+from repro.storage.client import ClientConfig
+from repro.storage.workloads import get_workload
+
+
+def run(duration_s: float = 30.0) -> None:
+    for name in ("dlio_bert", "dlio_megatron"):
+        wl = get_workload(name)
+        res_d, us_d = timed(run_scenario, [wl], configs=[ClientConfig()],
+                            duration_s=duration_s)
+        res_c, us_c = timed(run_scenario, [wl], carat=True,
+                            duration_s=duration_s)
+        emit(f"fig8/{name}/default_MBps", us_d,
+             f"{res_d['aggregate']/1e6:.1f}")
+        emit(f"fig8/{name}/carat_MBps", us_c,
+             f"{res_c['aggregate']/1e6:.1f}")
+        emit(f"fig8/{name}/carat_over_default", us_c,
+             f"{res_c['aggregate']/max(res_d['aggregate'],1):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Fig 7: dynamically changing workloads.
+
+Three sequences (read-only, write-only, mixed) of four Filebench patterns
+each; the workload switches every ``segment_s`` seconds. CARAT re-adapts
+online; each segment's throughput is compared against that segment's own
+static optimal and against the static default.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from benchmarks.common import carat_models, emit, optimal_config, timed
+from repro.config.types import CaratConfig
+from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.storage.client import ClientConfig
+from repro.storage.sim import Simulation
+from repro.storage.workloads import get_workload
+
+SEQUENCES = {
+    "read_seq": ["s_rd_sq_1m", "s_rd_rn_8k", "s_rd_sq_16m", "s_rd_rn_1m"],
+    "write_seq": ["s_wr_sq_1m", "s_wr_rn_8k", "s_wr_sq_16m", "s_wr_rn_1m"],
+    "mixed_seq": ["s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_16m", "s_wr_rn_8k"],
+}
+
+
+def _run_sequence(names: Sequence[str], segment_s: float, carat: bool,
+                  config: ClientConfig, seed: int) -> List[float]:
+    """Per-segment mean throughput for one policy."""
+    sim = Simulation([get_workload(names[0])],
+                     configs=[config], seed=seed)
+    if carat:
+        ctrl = CaratController(0, default_spaces(), carat_models(),
+                               CaratConfig(),
+                               arbiter=NodeCacheArbiter(default_spaces()))
+        sim.attach_controller(0, ctrl)
+    out = []
+    for name in names:
+        sim.clients[0].set_workload(get_workload(name))
+        before = (sim.clients[0].stats.read.app_bytes
+                  + sim.clients[0].stats.write.app_bytes)
+        sim.run(segment_s)
+        after = (sim.clients[0].stats.read.app_bytes
+                 + sim.clients[0].stats.write.app_bytes)
+        out.append((after - before) / segment_s)
+    return out
+
+
+def run(segment_s: float = 20.0, seeds=(0, 1, 2)) -> None:
+    for seq_name, names in SEQUENCES.items():
+        t0_metrics = []
+        defaults = np.mean([_run_sequence(names, segment_s, False,
+                                          ClientConfig(), s)
+                            for s in seeds], axis=0)
+        carats, us = timed(lambda: np.mean(
+            [_run_sequence(names, segment_s, True, ClientConfig(), s)
+             for s in seeds], axis=0))
+        for i, name in enumerate(names):
+            opt_cfg, opt_thr = optimal_config(get_workload(name))
+            emit(f"fig7/{seq_name}/{name}/carat_over_default", us / 4,
+                 f"{carats[i]/max(defaults[i],1):.2f}")
+            emit(f"fig7/{seq_name}/{name}/carat_over_optimal", us / 4,
+                 f"{carats[i]/max(opt_thr,1):.2f}")
+            t0_metrics.append(carats[i] / max(defaults[i], 1))
+        emit(f"fig7/{seq_name}/max_gain", us, f"{max(t0_metrics):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Table VII: traditional HPC kernels (h5bench VPIC-IO write, BDCATS-IO read).
+
+Large, aligned, sequential — the regime where Lustre defaults are already
+near-optimal; the paper expects CARAT on-par or slightly better.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_scenario, timed
+from repro.storage.client import ClientConfig
+from repro.storage.workloads import get_workload
+
+
+def run(duration_s: float = 25.0) -> None:
+    for name in ("vpic_io", "bdcats_io"):
+        wl = get_workload(name)
+        res_d, us_d = timed(run_scenario, [wl], configs=[ClientConfig()],
+                            duration_s=duration_s)
+        res_c, us_c = timed(run_scenario, [wl], carat=True,
+                            duration_s=duration_s)
+        emit(f"table7/{name}/default_MBps", us_d,
+             f"{res_d['aggregate']/1e6:.1f}")
+        emit(f"table7/{name}/carat_MBps", us_c,
+             f"{res_c['aggregate']/1e6:.1f}")
+        emit(f"table7/{name}/carat_over_default", us_c,
+             f"{res_c['aggregate']/max(res_d['aggregate'],1):.2f}")
+
+
+if __name__ == "__main__":
+    run()

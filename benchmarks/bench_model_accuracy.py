@@ -1,0 +1,22 @@
+"""Table IV: error rates of SVM / FC-NN / RNN / TCN / GBDT (read + write)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.ml.train import train_all_models
+
+
+def run() -> None:
+    reports, us = timed(train_all_models, reps=16, duration_s=60.0, seed=0)
+    order = ["svm", "fcnn", "rnn", "tcn", "gbdt"]
+    per_model_us = us / len(order)
+    for name in order:
+        r = reports[name]
+        emit(f"table4/{name}/read_error", per_model_us, f"{r.read_error:.3f}")
+        emit(f"table4/{name}/write_error", per_model_us,
+             f"{r.write_error:.3f}")
+    best = min(reports.values(), key=lambda r: r.read_error + r.write_error)
+    emit("table4/best_model", us, best.name)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Table VIII: per-client CARAT overheads.
+
+Snapshot creation, model inference (whole candidate space), end-to-end
+tuning — measured per probe on this container, for the read- and
+write-centric workloads. Also times the Pallas GBDT inference path
+(interpret mode here; the TPU deployment path).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import carat_models, emit
+from repro.config.types import CaratConfig
+from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.kernels.gbdt_infer.ops import PallasGBDTScorer
+from repro.storage.client import ClientConfig
+from repro.storage.sim import Simulation
+from repro.storage.workloads import get_workload
+
+
+def run(duration_s: float = 30.0) -> None:
+    for op, wl_name in (("read", "s_rd_rn_1m"), ("write", "s_wr_sq_1m")):
+        sim = Simulation([get_workload(wl_name)],
+                         configs=[ClientConfig()], seed=0)
+        ctrl = CaratController(0, default_spaces(), carat_models(),
+                               CaratConfig(),
+                               arbiter=NodeCacheArbiter(default_spaces()))
+        sim.attach_controller(0, ctrl)
+        sim.run(duration_s)
+        ov = ctrl.overheads()
+        emit(f"table8/{op}/snapshot_ms", ov["snapshot_ms"] * 1e3,
+             f"{ov['snapshot_ms']:.3f}")
+        emit(f"table8/{op}/inference_ms", ov["inference_ms"] * 1e3,
+             f"{ov['inference_ms']:.3f}")
+        emit(f"table8/{op}/end_to_end_ms", ov["end_to_end_ms"] * 1e3,
+             f"{ov['end_to_end_ms']:.3f}")
+        probe = CaratConfig().probe_interval_s * 1e3
+        emit(f"table8/{op}/fits_probe_interval", 0.0,
+             str(ov["end_to_end_ms"] < probe))
+
+    # Pallas inference path (whole candidate space in one launch)
+    models = carat_models()
+    scorer = PallasGBDTScorer(models["read"])
+    spaces = default_spaces()
+    n = len(spaces.rpc_candidates())
+    X = np.random.default_rng(0).normal(size=(n, 22)).astype(np.float32)
+    scorer.predict_proba(X)        # compile
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        scorer.predict_proba(X)
+    dt = (time.perf_counter() - t0) / reps
+    emit("table8/pallas_gbdt_infer_ms_interpret", dt * 1e6, f"{dt*1e3:.3f}")
+
+
+if __name__ == "__main__":
+    run()

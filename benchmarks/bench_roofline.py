@@ -1,0 +1,44 @@
+"""Roofline table: reads dryrun_results/*.json and prints the full
+per-(arch x shape x mesh) baseline table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline/status", 0.0, "no-dryrun-results (run launch.dryrun)")
+        return
+    n_ok = n_skip = 0
+    for fn in files:
+        with open(fn) as f:
+            r = json.load(f)
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            n_skip += 1
+            emit(f"roofline/{cell}/skipped", 0.0, r["reason"])
+            continue
+        n_ok += 1
+        emit(f"roofline/{cell}/t_compute_s", r.get("compile_s", 0) * 1e6,
+             f"{r['t_compute_s']:.4f}")
+        emit(f"roofline/{cell}/t_memory_s", 0.0, f"{r['t_memory_s']:.4f}")
+        emit(f"roofline/{cell}/t_collective_s", 0.0,
+             f"{r['t_collective_s']:.4f}")
+        emit(f"roofline/{cell}/bottleneck", 0.0, r["bottleneck"])
+        emit(f"roofline/{cell}/roofline_fraction", 0.0,
+             f"{r['roofline_fraction']:.3f}")
+        emit(f"roofline/{cell}/useful_flops_ratio", 0.0,
+             f"{r['useful_flops_ratio']:.3f}")
+    emit("roofline/cells_ok", 0.0, n_ok)
+    emit("roofline/cells_skipped", 0.0, n_skip)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig 6: static workloads — default vs CARAT vs optimal.
+
+24 Filebench workloads: 12 seen single-stream (left column of Fig 6) and
+12 unseen five-stream (right column). The paper's claim: CARAT matches
+default within ~10% where default is already near-optimal, and otherwise
+moves to near-optimal — up to 3x.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (emit, optimal_config, run_scenario, timed)
+from repro.storage.client import ClientConfig
+from repro.storage.workloads import get_workload, training_workloads, unseen_workloads
+
+
+def run(duration_s: float = 20.0) -> None:
+    worst_ratio, best_gain = 1e9, 0.0
+    for group, names in (("seen", training_workloads()),
+                         ("unseen", unseen_workloads())):
+        for name in names:
+            wl = get_workload(name)
+            (default,), us_d = timed(
+                lambda: (run_scenario([wl], configs=[ClientConfig()],
+                                      duration_s=duration_s)["aggregate"],))
+            (carat,), us_c = timed(
+                lambda: (run_scenario([wl], carat=True,
+                                      duration_s=duration_s)["aggregate"],))
+            (_, optimal), us_o = timed(optimal_config, wl)
+            ratio_d = carat / max(default, 1.0)
+            ratio_o = carat / max(optimal, 1.0)
+            emit(f"fig6/{group}/{name}/default_MBps", us_d, f"{default/1e6:.1f}")
+            emit(f"fig6/{group}/{name}/carat_MBps", us_c, f"{carat/1e6:.1f}")
+            emit(f"fig6/{group}/{name}/optimal_MBps", us_o, f"{optimal/1e6:.1f}")
+            emit(f"fig6/{group}/{name}/carat_over_default", us_c,
+                 f"{ratio_d:.2f}")
+            emit(f"fig6/{group}/{name}/carat_over_optimal", us_c,
+                 f"{ratio_o:.2f}")
+            worst_ratio = min(worst_ratio, ratio_d)
+            best_gain = max(best_gain, ratio_d)
+    emit("fig6/summary/max_gain_over_default", 0.0, f"{best_gain:.2f}")
+    emit("fig6/summary/min_ratio_vs_default", 0.0, f"{worst_ratio:.2f}")
+
+
+if __name__ == "__main__":
+    run()

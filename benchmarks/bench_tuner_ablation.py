@@ -1,0 +1,27 @@
+"""Tuner ablation (paper §III-D narrative, quantified): greedy vs
+epsilon-greedy vs conditional-score-greedy on workloads with headroom."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_scenario, timed
+from repro.config.types import CaratConfig
+from repro.storage.client import ClientConfig
+from repro.storage.workloads import get_workload
+
+WORKLOADS = ["s_rd_rn_8k", "f_rd_rn_8k", "f_rd_rn_1m", "s_wr_sq_1m"]
+
+
+def run(duration_s: float = 25.0) -> None:
+    for wl_name in WORKLOADS:
+        wl = get_workload(wl_name)
+        base = run_scenario([wl], configs=[ClientConfig()],
+                            duration_s=duration_s)["aggregate"]
+        for tuner in ("greedy", "epsilon_greedy", "conditional_score"):
+            cfg = CaratConfig(tuner=tuner)
+            res, us = timed(run_scenario, [wl], carat=True, carat_cfg=cfg,
+                            duration_s=duration_s)
+            emit(f"ablation/{wl_name}/{tuner}_over_default", us,
+                 f"{res['aggregate']/max(base,1):.2f}")
+
+
+if __name__ == "__main__":
+    run()

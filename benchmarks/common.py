@@ -1,0 +1,111 @@
+"""Shared benchmark plumbing.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows via
+:func:`emit` (us_per_call = wall time of the measured run; derived = the
+paper-relevant metric). Models are trained once and cached on disk.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config.types import CaratConfig
+from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core.ml.train import get_default_models
+from repro.storage.client import ClientConfig
+from repro.storage.sim import Simulation
+from repro.storage.workloads import WorkloadSpec, get_workload
+
+REPEATS = 5        # paper: each experiment repeated five times
+DURATION_S = 20.0
+
+_ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = (name, us_per_call, str(derived))
+    _ROWS.append(row)
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+_MODELS = None
+
+
+def carat_models():
+    global _MODELS
+    if _MODELS is None:
+        m_r, m_w = get_default_models()
+        _MODELS = {"read": m_r, "write": m_w}
+    return _MODELS
+
+
+def run_scenario(
+    workloads: Sequence[WorkloadSpec],
+    configs: Optional[Sequence[ClientConfig]] = None,
+    carat: bool = False,
+    carat_cfg: Optional[CaratConfig] = None,
+    shared_node: bool = False,
+    duration_s: float = DURATION_S,
+    seeds: Sequence[int] = tuple(range(REPEATS)),
+    stripe_offsets: Optional[Sequence[int]] = None,
+) -> Dict:
+    """Average per-client + aggregate throughput over REPEATS seeds."""
+    n = len(workloads)
+    per_client = np.zeros((len(seeds), n))
+    controllers_last = None
+    for si, seed in enumerate(seeds):
+        sim = Simulation(workloads, configs=configs, seed=seed,
+                         stripe_offsets=stripe_offsets)
+        controllers = []
+        if carat:
+            spaces = default_spaces()
+            arb = NodeCacheArbiter(spaces) if shared_node else None
+            for i in range(n):
+                node_arb = arb if shared_node else NodeCacheArbiter(spaces)
+                ctrl = CaratController(i, spaces, carat_models(),
+                                       carat_cfg or CaratConfig(),
+                                       arbiter=node_arb)
+                sim.attach_controller(i, ctrl)
+                controllers.append(ctrl)
+        res = sim.run(duration_s)
+        for i in range(n):
+            per_client[si, i] = res.client_mean_throughput(i)
+        controllers_last = controllers
+    return {
+        "per_client": per_client.mean(axis=0),
+        "per_client_std": per_client.std(axis=0),
+        "aggregate": per_client.sum(axis=1).mean(),
+        "controllers": controllers_last,
+    }
+
+
+def optimal_config(workload: WorkloadSpec, duration_s: float = 15.0,
+                   seeds: Sequence[int] = (0, 1)) -> Tuple[ClientConfig, float]:
+    """Offline exhaustive-ish search (the paper's 'optimal' scenario)."""
+    spaces = default_spaces()
+    best_cfg, best = None, -1.0
+    for w, f, c in itertools.product(
+            spaces.rpc_window_pages[::2] + (spaces.rpc_window_pages[-1],),
+            spaces.rpcs_in_flight[::2] + (spaces.rpcs_in_flight[-1],),
+            (spaces.dirty_cache_mb[0], spaces.dirty_cache_mb[-1])):
+        cfg = ClientConfig(w, f, c)
+        thr = np.mean([
+            run_scenario([workload], configs=[cfg], duration_s=duration_s,
+                         seeds=[s])["aggregate"]
+            for s in seeds])
+        if thr > best:
+            best, best_cfg = thr, cfg
+    return best_cfg, best
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,78 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  table4    ML model error rates (paper Table IV)
+  fig6      static workloads, default/CARAT/optimal (paper Fig 6)
+  fig7      dynamic workload sequences (paper Fig 7)
+  table5    independent per-client tuning (paper Table V)
+  table6    external interference (paper Table VI)
+  fig8      DLIO DL kernels (paper Fig 8)
+  table7    h5bench HPC kernels (paper Table VII)
+  table8    per-client overheads (paper Table VIII)
+  ablation  tuner strategy ablation (paper §III-D, quantified)
+  roofline  per-(arch x shape x mesh) dry-run roofline terms (§Roofline)
+
+Run a subset with ``python -m benchmarks.run --only fig6,table8``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_model_accuracy,
+    bench_static,
+    bench_dynamic,
+    bench_independent,
+    bench_interference,
+    bench_dlio,
+    bench_h5,
+    bench_overhead,
+    bench_tuner_ablation,
+    bench_roofline,
+)
+
+SECTIONS = [
+    ("table4", bench_model_accuracy.run),
+    ("fig6", bench_static.run),
+    ("fig7", bench_dynamic.run),
+    ("table5", bench_independent.run),
+    ("table6", bench_interference.run),
+    ("fig8", bench_dlio.run),
+    ("table7", bench_h5.run),
+    ("table8", bench_overhead.run),
+    ("ablation", bench_tuner_ablation.run),
+    ("roofline", bench_roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in SECTIONS:
+        if only is not None and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# section {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        print(f"# {len(failures)} section failures: {failures}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

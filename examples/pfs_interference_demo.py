@@ -1,0 +1,52 @@
+"""Interference demo (paper §IV-H in miniature): five clients with mixed
+workloads hammer overlapping OSTs; CARAT's decentralized, client-local
+decisions lift aggregate throughput without any coordination.
+
+    PYTHONPATH=src python examples/pfs_interference_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.config.types import CaratConfig
+from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core.ml.train import get_default_models
+from repro.storage import Simulation, get_workload
+from repro.storage.client import ClientConfig
+
+WORKLOADS = ["s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_16m", "s_wr_rn_1m",
+             "s_rd_sq_8k"]
+OFFSETS = [0, 1, 2, 0, 1]      # five clients over three OSTs
+
+
+def run(carat: bool) -> float:
+    wls = [get_workload(n) for n in WORKLOADS]
+    sim = Simulation(wls, configs=[ClientConfig() for _ in wls], seed=1,
+                     stripe_offsets=OFFSETS)
+    if carat:
+        m_r, m_w = get_default_models()
+        models = {"read": m_r, "write": m_w}
+        spaces = default_spaces()
+        for i in range(len(wls)):
+            sim.attach_controller(i, CaratController(
+                i, spaces, models, CaratConfig(),
+                arbiter=NodeCacheArbiter(spaces)))
+    res = sim.run(30.0)
+    for i, name in enumerate(WORKLOADS):
+        print(f"    client {i} ({name:12s}): "
+              f"{res.client_mean_throughput(i)/1e6:8.1f} MB/s")
+    return res.aggregate_throughput
+
+
+def main():
+    print("five clients, overlapping OSTs, mixed read/write")
+    print("-- default static configs --")
+    base = run(carat=False)
+    print(f"  aggregate: {base/1e6:.1f} MB/s")
+    print("-- CARAT per-client online co-tuning --")
+    tuned = run(carat=True)
+    print(f"  aggregate: {tuned/1e6:.1f} MB/s  ({tuned/base:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""One module per assigned architecture. Importing this package registers all.
+
+Each module defines ``ARCH: ArchConfig`` with the exact numbers from the
+assignment brief (source tags preserved) and registers it under its id.
+"""
+from repro.configs import (  # noqa: F401
+    granite_3_2b,
+    command_r_plus_104b,
+    h2o_danube_1_8b,
+    internlm2_20b,
+    mamba2_370m,
+    recurrentgemma_2b,
+    paligemma_3b,
+    moonshot_v1_16b_a3b,
+    deepseek_v3_671b,
+    hubert_xlarge,
+    carat_defaults,
+)

@@ -1,0 +1,24 @@
+"""CARAT — the paper's contribution, as a composable module.
+
+Pipeline (paper Fig 4): counters -> SnapshotBuilder (metrics + deltas)
+-> ML model f(theta, H_t) -> RPC tuner (Alg 1) / cache tuner (Alg 2)
+-> actuation, orchestrated per client by CaratController (two-stage, §III-A).
+"""
+from repro.core.policy import CaratSpaces, default_spaces
+from repro.core.metrics import Metrics, compute_metrics, FEATURE_NAMES
+from repro.core.snapshot import SnapshotBuilder, Snapshot
+from repro.core.rpc_tuner import (
+    ConditionalScoreGreedy,
+    GreedyTuner,
+    EpsilonGreedyTuner,
+    make_tuner,
+)
+from repro.core.cache_tuner import cache_allocation
+from repro.core.controller import CaratController, NodeCacheArbiter
+
+__all__ = [
+    "CaratSpaces", "default_spaces", "Metrics", "compute_metrics",
+    "FEATURE_NAMES", "SnapshotBuilder", "Snapshot",
+    "ConditionalScoreGreedy", "GreedyTuner", "EpsilonGreedyTuner",
+    "make_tuner", "cache_allocation", "CaratController", "NodeCacheArbiter",
+]

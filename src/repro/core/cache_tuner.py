@@ -1,0 +1,62 @@
+"""Cache parameter tuner (paper §III-E, Algorithm 2) — rule-based heuristic.
+
+Allocates the node's cache budget across its I/O clients at I/O-phase
+boundaries:
+
+1. idle clients get the minimum discrete cache value;
+2. if the budget covers every active client at max, everyone active gets max;
+3. otherwise each active client gets the max of three demand estimates —
+   (a) peak observed cache utilization, (b) peak in-flight RPC volume,
+   (c) its share of write RPCs applied to the remaining budget —
+   snapped UP to the discrete grid (bounded overprovisioning is accepted,
+   as the paper argues cache usage naturally drains).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core.policy import CaratSpaces
+
+MB = 1024.0 * 1024.0
+
+
+@dataclass
+class CacheDemand:
+    """Per-client factors collected over the last I/O-active stage."""
+    client_id: int
+    active: bool
+    peak_cache_bytes: float      # factor (1): bursts absorbed by the cache
+    peak_inflight_bytes: float   # factor (2): RPC bursts accommodated
+    write_rpc_share: float       # factor (3): share of the node's write RPCs
+
+
+def cache_allocation(
+    demands: List[CacheDemand],
+    spaces: CaratSpaces,
+    node_budget_mb: float,
+) -> Dict[int, int]:
+    """Algorithm 2. Returns client_id -> dirty_cache_mb."""
+    out: Dict[int, int] = {}
+    active = [d for d in demands if d.active]
+    idle = [d for d in demands if not d.active]
+    for d in idle:                                   # line 2
+        out[d.client_id] = spaces.cache_min
+    remaining = node_budget_mb - spaces.cache_min * len(idle)
+
+    if not active:
+        return out
+
+    if spaces.cache_max * len(active) <= remaining:  # line 5
+        for d in active:
+            out[d.client_id] = spaces.cache_max
+        return out
+
+    total_write_share = sum(max(d.write_rpc_share, 0.0) for d in active) or 1.0
+    for d in active:                                 # line 7
+        f1 = d.peak_cache_bytes / MB
+        f2 = d.peak_inflight_bytes / MB
+        f3 = (d.write_rpc_share / total_write_share) * remaining
+        want = max(f1, f2, f3)
+        out[d.client_id] = spaces.snap_cache_up(want)
+    return out

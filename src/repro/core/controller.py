@@ -1,0 +1,169 @@
+"""The CARAT per-client controller — two-stage tuning (paper §III-A, Fig 5).
+
+Stage 1 (every probe interval while I/O-active): sample counters, build the
+snapshot, pick the read- or write-focused model by dominant transfer volume,
+run the tuner (Algorithm 1), actuate RPC params immediately.
+
+Stage 2 (at the I/O-inactive -> active boundary, after > 1 s of silence):
+the node-scope cache arbiter collects each client's active-stage factors and
+re-allocates cache limits (Algorithm 2). Cache params propagate slowly, so
+they are only touched at boundaries where the previous setting's influence
+has faded.
+
+The controller is *decentralized*: it sees only its own client's counters.
+Cross-client coordination exists only within a node (the paper's stats
+collector, Fig 4 step 5), never across the cluster.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.config.types import CaratConfig
+from repro.core.cache_tuner import CacheDemand, cache_allocation
+from repro.core.policy import CaratSpaces
+from repro.core.rpc_tuner import _TunerBase, make_tuner
+from repro.core.snapshot import Snapshot, SnapshotBuilder
+from repro.storage.client import IOClient
+from repro.utils.rng import RngStream
+
+
+@dataclass
+class _StageFactors:
+    """Factors accumulated over one I/O-active stage (for Algorithm 2)."""
+    peak_cache_bytes: float = 0.0
+    peak_inflight_bytes: float = 0.0
+    write_rpcs: float = 0.0
+    total_rpcs: float = 0.0
+    saw_activity: bool = False
+
+    def update(self, snap: Snapshot) -> None:
+        self.saw_activity = self.saw_activity or snap.active
+        cache_bytes = snap.dirty_cache_mb * 1024.0 * 1024.0
+        self.peak_cache_bytes = max(self.peak_cache_bytes,
+                                    snap.write.dirty_cache_util * cache_bytes)
+        vol = snap.read.data_volume + snap.write.data_volume
+        inflight_bytes = snap.inflight_peak * snap.window_pages * 4096.0
+        self.peak_inflight_bytes = max(self.peak_inflight_bytes, inflight_bytes)
+        # RPC mix for factor (3)
+        self.write_rpcs += snap.write.data_volume
+        self.total_rpcs += vol
+
+
+class NodeCacheArbiter:
+    """Stage-2 stats collector + cache tuner for all clients on one node."""
+
+    def __init__(self, spaces: CaratSpaces, node_budget_mb: Optional[float] = None):
+        self.spaces = spaces
+        self.node_budget_mb = node_budget_mb
+        self.members: List["CaratController"] = []
+
+    def register(self, ctrl: "CaratController") -> None:
+        self.members.append(ctrl)
+
+    def budget(self) -> float:
+        if self.node_budget_mb is not None:
+            return self.node_budget_mb
+        return self.spaces.cache_max * max(len(self.members), 1) * 0.75
+
+    def retune(self) -> Dict[int, int]:
+        demands: List[CacheDemand] = []
+        total_write = sum(m.stage_factors.write_rpcs for m in self.members) or 1.0
+        for m in self.members:
+            f = m.stage_factors
+            demands.append(CacheDemand(
+                client_id=m.client_id,
+                active=f.saw_activity,
+                peak_cache_bytes=f.peak_cache_bytes,
+                peak_inflight_bytes=f.peak_inflight_bytes,
+                write_rpc_share=f.write_rpcs / total_write,
+            ))
+        alloc = cache_allocation(demands, self.spaces, self.budget())
+        for m in self.members:
+            if m.client is not None and m.client_id in alloc:
+                m.client.set_cache_limit(alloc[m.client_id])
+            m.stage_factors = _StageFactors()
+        return alloc
+
+
+class CaratController:
+    """One CARAT instance, attached to one I/O client."""
+
+    def __init__(
+        self,
+        client_id: int,
+        spaces: CaratSpaces,
+        models: Dict[str, object],          # op -> predict_proba callable
+        cfg: Optional[CaratConfig] = None,
+        rng: Optional[RngStream] = None,
+        arbiter: Optional[NodeCacheArbiter] = None,
+    ):
+        self.client_id = client_id
+        self.cfg = cfg or CaratConfig()
+        self.spaces = spaces
+        self.builder = SnapshotBuilder(interval_s=self.cfg.probe_interval_s,
+                                       history_k=self.cfg.history_k)
+        probs = {op: (m.predict_proba if hasattr(m, "predict_proba") else m)
+                 for op, m in models.items()}
+        self.tuner: _TunerBase = make_tuner(
+            self.cfg.tuner, spaces, probs, tau=self.cfg.prob_tau,
+            alpha=self.cfg.alpha, beta=self.cfg.beta,
+            epsilon=self.cfg.epsilon,
+            rng=rng or RngStream(client_id, "carat"))
+        self.arbiter = arbiter
+        if arbiter is not None:
+            arbiter.register(self)
+        # stage machine
+        self.inactive_s = 0.0
+        self.was_inactive_long = False
+        self.stage_factors = _StageFactors()
+        self.client: Optional[IOClient] = None
+        # Table VIII accounting
+        self.apply_time_total = 0.0
+        self.apply_count = 0
+        self.decisions: List[tuple] = []
+
+    # --- Simulation controller interface ---------------------------------------
+    def __call__(self, client: IOClient, t: float, dt: float) -> None:
+        self.client = client
+        snap = self.builder.sample(client.stats, t)
+        if snap is None:
+            return
+        self.stage_factors.update(snap)
+
+        if not snap.active:
+            # I/O-inactive: no RPC transfers, so RPC tuning is disabled
+            self.inactive_s += dt
+            if self.inactive_s >= self.cfg.inactive_threshold_s:
+                self.was_inactive_long = True
+            return
+
+        # I/O resumed after a long-enough inactive stage: stage-2 boundary
+        if self.was_inactive_long and self.arbiter is not None:
+            self.arbiter.retune()
+        self.was_inactive_long = False
+        self.inactive_s = 0.0
+
+        # stage-1 RPC tuning, every probe interval
+        op = snap.dominant_op
+        feats = self.builder.feature_vector(op)
+        if feats is None:
+            return
+        t0 = time.perf_counter()
+        proposal = self.tuner.propose(op, feats)
+        if proposal is not None:
+            client.set_rpc_config(*proposal)
+            self.decisions.append((t, op) + proposal)
+        self.apply_time_total += time.perf_counter() - t0
+        self.apply_count += 1
+
+    # --- Table VIII ----------------------------------------------------------
+    def overheads(self) -> Dict[str, float]:
+        return {
+            "snapshot_ms": self.builder.mean_snapshot_time_s * 1e3,
+            "inference_ms": self.tuner.mean_inference_s * 1e3,
+            "end_to_end_ms": (self.builder.mean_snapshot_time_s
+                              + self.apply_time_total
+                              / max(self.apply_count, 1)) * 1e3,
+        }

@@ -1,0 +1,10 @@
+from repro.core.ml.gbdt import ObliviousGBDT, train_gbdt
+from repro.core.ml.svm import LinearSVM, train_svm
+from repro.core.ml.nets import FCNN, VanillaRNN, TCN, train_net
+from repro.core.ml.dataset import collect_training_data, TrainingData
+
+__all__ = [
+    "ObliviousGBDT", "train_gbdt", "LinearSVM", "train_svm",
+    "FCNN", "VanillaRNN", "TCN", "train_net",
+    "collect_training_data", "TrainingData",
+]

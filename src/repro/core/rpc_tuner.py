@@ -1,0 +1,144 @@
+"""RPC parameter tuners (paper §III-D, Algorithm 1).
+
+Three strategies, in the order the paper developed them:
+
+* ``GreedyTuner`` — argmax model probability. Safe but conservative: high
+  probability does not mean high gain.
+* ``EpsilonGreedyTuner`` — greedy + epsilon random exploration. Better
+  asymptotically but slow and high-variance online.
+* ``ConditionalScoreGreedy`` — the paper's contribution: tau-filter the
+  candidates by probability, MinMax-normalize the retained set, then rank
+  by a score that biases toward "progressive" configurations:
+      WriteScore(theta) = f(theta,H) * (1 + beta * sum(theta_norm))
+      ReadScore(theta)  = f(theta,H) * (1 + alpha * theta_norm[0]) + theta_norm[1]
+  with alpha = beta = 0.5 (paper's balanced gain-stability tradeoff).
+
+A tuner proposes ``(window_pages, in_flight)`` or None (retain current —
+the stability gate of §III-F when no candidate clears tau).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import CaratSpaces
+from repro.utils.rng import RngStream
+
+# A scorer maps a batch of rows (n_candidates, n_features) -> probabilities.
+ProbFn = Callable[[np.ndarray], np.ndarray]
+
+
+class _TunerBase:
+    def __init__(
+        self,
+        spaces: CaratSpaces,
+        models: Dict[str, ProbFn],          # "read"/"write" -> predict_proba
+        tau: float = 0.8,
+        alpha: float = 0.5,
+        beta: float = 0.5,
+        rng: Optional[RngStream] = None,
+    ):
+        self.spaces = spaces
+        self.models = models
+        self.tau = tau
+        self.alpha = alpha
+        self.beta = beta
+        self.rng = rng or RngStream(0, "tuner")
+        self._cands = spaces.rpc_candidates()
+        self._theta = spaces.theta_features()          # (n, 2) log2 scale
+        # Table VIII accounting
+        self.inference_time_total = 0.0
+        self.tune_time_total = 0.0
+        self.tune_count = 0
+
+    # ------------------------------------------------------------------ hooks
+    def _probs(self, op: str, feats: np.ndarray) -> np.ndarray:
+        X = np.concatenate(
+            [np.broadcast_to(feats, (len(self._cands), feats.shape[0])),
+             self._theta], axis=1).astype(np.float32)
+        t0 = time.perf_counter()
+        probs = np.asarray(self.models[op](X), dtype=np.float64).reshape(-1)
+        self.inference_time_total += time.perf_counter() - t0
+        return probs
+
+    def _select(self, op: str, probs: np.ndarray) -> Optional[int]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ API
+    def propose(self, op: str, feats: np.ndarray) -> Optional[Tuple[int, int]]:
+        t0 = time.perf_counter()
+        probs = self._probs(op, feats)
+        k = self._select(op, probs)
+        self.tune_time_total += time.perf_counter() - t0
+        self.tune_count += 1
+        if k is None:
+            return None
+        return self._cands[k]
+
+    @property
+    def mean_inference_s(self) -> float:
+        return self.inference_time_total / max(self.tune_count, 1)
+
+    @property
+    def mean_tune_s(self) -> float:
+        return self.tune_time_total / max(self.tune_count, 1)
+
+
+class GreedyTuner(_TunerBase):
+    """Pure greedy: argmax probability (paper's first attempt)."""
+
+    def _select(self, op, probs):
+        return int(np.argmax(probs))
+
+
+class EpsilonGreedyTuner(_TunerBase):
+    """Greedy with epsilon-random exploration (paper's second attempt)."""
+
+    def __init__(self, *args, epsilon: float = 0.1, **kw):
+        super().__init__(*args, **kw)
+        self.epsilon = epsilon
+
+    def _select(self, op, probs):
+        if float(self.rng.uniform()) < self.epsilon:
+            return int(self.rng.integers(0, len(probs)))
+        return int(np.argmax(probs))
+
+
+class ConditionalScoreGreedy(_TunerBase):
+    """Algorithm 1: tau-filter + normalized progressive score."""
+
+    def _select(self, op, probs):
+        keep = np.where(probs > self.tau)[0]            # line 1
+        if keep.size == 0:
+            return None                                 # retain current config
+        theta = self._theta[keep]                       # line 2: MinMax over S
+        lo, hi = theta.min(axis=0), theta.max(axis=0)
+        tnorm = (theta - lo) / np.maximum(hi - lo, 1e-9)
+        f = probs[keep]
+        if op == "write":                               # line 5
+            score = f * (1.0 + self.beta * tnorm.sum(axis=1))
+        else:                                           # line 7
+            score = f * (1.0 + self.alpha * tnorm[:, 0]) + tnorm[:, 1]
+        return int(keep[np.argmax(score)])              # line 3
+
+
+def make_tuner(
+    kind: str,
+    spaces: CaratSpaces,
+    models: Dict[str, ProbFn],
+    tau: float = 0.8,
+    alpha: float = 0.5,
+    beta: float = 0.5,
+    epsilon: float = 0.1,
+    rng: Optional[RngStream] = None,
+) -> _TunerBase:
+    if kind == "greedy":
+        return GreedyTuner(spaces, models, tau, alpha, beta, rng)
+    if kind == "epsilon_greedy":
+        return EpsilonGreedyTuner(spaces, models, tau, alpha, beta, rng,
+                                  epsilon=epsilon)
+    if kind == "conditional_score":
+        return ConditionalScoreGreedy(spaces, models, tau, alpha, beta, rng)
+    raise KeyError(f"unknown tuner {kind!r}")

@@ -1,0 +1,3 @@
+from repro.data.pipeline import PFSDataPipeline, TokenSource, make_host_batch
+
+__all__ = ["PFSDataPipeline", "TokenSource", "make_host_batch"]

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``gbdt_infer`` — CARAT's per-interval scoring of the whole candidate
+  config space (the paper's Table VIII inference cost, run on every host
+  every probe interval).
+* ``flash_attention`` — training/prefill attention (online softmax, causal /
+  sliding-window / bidirectional masking, GQA).
+* ``decode_attention`` — single-token decode against a long KV cache.
+
+Each kernel ships as kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling) + ops.py (jit'd public wrapper with backend switch) + ref.py (pure
+jnp oracle). On this CPU-only container kernels are validated with
+``interpret=True``; on TPU the same BlockSpecs drive the MXU/VPU directly.
+"""
+from repro.kernels.gbdt_infer.ops import gbdt_predict_proba, pack_gbdt
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import decode_attention
+
+__all__ = ["gbdt_predict_proba", "pack_gbdt", "flash_attention",
+           "decode_attention"]

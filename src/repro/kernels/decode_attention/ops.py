@@ -1,0 +1,29 @@
+"""Public decode-attention op with backend switch (see flash_attention.ops)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    backend: str = "xla",
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if backend == "xla":
+        return decode_attention_ref(q, k, v, lengths=lengths, scale=scale)
+    if backend == "pallas":
+        if lengths is None:
+            lengths = jnp.full((q.shape[0],), k.shape[2], dtype=jnp.int32)
+        return decode_attention_pallas(q, k, v, lengths, scale=scale,
+                                       block_k=block_k, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

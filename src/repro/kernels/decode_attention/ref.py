@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: single-token decode attention against a KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,         # (B, Hq, D) — one new token per sequence
+    k: jnp.ndarray,         # (B, Hkv, S, D) KV cache
+    v: jnp.ndarray,         # (B, Hkv, S, D)
+    lengths: Optional[jnp.ndarray] = None,   # (B,) valid cache lengths
+    scale: Optional[float] = None,
+) -> jnp.ndarray:           # (B, Hq, D)
+    """GQA decode WITHOUT materializing repeated K/V: queries are grouped
+    per kv-head and contracted against the cache as-is. This keeps the
+    cache's sharding intact under SPMD — a `jnp.repeat` here forced XLA to
+    all-gather the entire (B, Hkv, S, D) cache in f32 every layer
+    (§Perf iteration 3); the grouped form communicates only the (B, Hkv,
+    G, S) logits psum when the contracted head_dim is sharded."""
+    from repro.parallel.constraints import constrain
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else float(d) ** -0.5
+    qg = q.reshape(b, hkv, group, d)
+    # align the query layout with the cache layout (launcher-set rules);
+    # otherwise the partitioner all-gathers the cache instead of resharding
+    # the (tiny) query
+    qg = constrain(qg, ("act_batch", "act_kv_heads", None, "act_head_dim"))
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if lengths is not None:
+        pos = jnp.arange(s)[None, None, None, :]
+        logits = jnp.where(pos < lengths[:, None, None, None], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    # mixed-precision dot: probs stay f32, the cache stays bf16 (an astype
+    # here materializes — and under SPMD all-gathers — a full f32 cache copy)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)

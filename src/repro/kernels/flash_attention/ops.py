@@ -1,0 +1,48 @@
+"""Public flash-attention op with backend switch.
+
+``backend="xla"`` runs the exact oracle (XLA fuses it well and it is what
+the distributed dry-run lowers — Pallas interpret mode cannot compile for
+the 512-device SPMD mesh on CPU). ``backend="pallas"`` runs the TPU kernel
+(interpret mode on CPU). The two are allclose by the kernel test suite; on
+real TPU hardware the launcher flips the default to "pallas".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import (
+    flash_attention_ref,
+    flash_attention_xla_chunked,
+)
+
+# Above this key length the exact S x S oracle would dominate live memory;
+# switch to the chunked-scan XLA formulation (same math, O(S * block)).
+_CHUNKED_THRESHOLD = 2048
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    backend: str = "xla",
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if backend == "xla":
+        if k.shape[2] > _CHUNKED_THRESHOLD:
+            return flash_attention_xla_chunked(
+                q, k, v, causal=causal, window=window, scale=scale)
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    if backend == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

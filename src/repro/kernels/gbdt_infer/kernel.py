@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: oblivious-GBDT ensemble inference.
+
+CARAT's hot loop scores every candidate configuration against the current
+snapshot every probe interval on every host. The ensemble is tiny (a few
+hundred trees x depth 5) but latency matters (Table VIII) and the batch is
+the whole candidate space, so the kernel keeps the entire model resident in
+VMEM and streams candidate blocks through it:
+
+* feature gather  -> one-hot matmul on the MXU (no HBM gather);
+* level compares  -> VPU;
+* leaf selection  -> dense (1-b, b) product expansion (branch-free, no
+  gather) contracted against the leaf table.
+
+Grid: one dimension over candidate blocks. Block shapes are padded to the
+TPU tile (8, 128) so the same BlockSpecs are legal on real hardware.
+
+VMEM budget at the default shapes (T<=512 trees, D=5, F<=32, BN=128):
+  x tile     128 x 32 x 4       =  16 KiB
+  sel        32 x (T*D=2560) x 4 = 320 KiB
+  thr        2560 x 4            =  10 KiB
+  leaf       512 x 32 x 4        =  64 KiB
+  expansion  128 x 512 x 32 x 4  =  8 MiB   -> blocked over trees (BT=64)
+The tree-blocked expansion keeps the working set ~1 MiB, comfortably in
+the ~16 MiB VMEM of a v5e core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gbdt_kernel(x_ref, sel_ref, thr_ref, leaf_ref, base_ref, out_ref,
+                 *, depth: int, block_trees: int):
+    x = x_ref[...]                       # (BN, F)
+    sel = sel_ref[...]                   # (F, T*D)
+    thr = thr_ref[...]                   # (1, T*D)
+    leaf = leaf_ref[...]                 # (T, 2**D)
+    n_trees = leaf.shape[0]
+    bn = x.shape[0]
+
+    # (1) gather split features for every (tree, level) via MXU matmul
+    g = jnp.dot(x, sel, preferred_element_type=jnp.float32)   # (BN, T*D)
+    bits = (g > thr).astype(jnp.float32)
+    bits = bits.reshape(bn, n_trees, depth)
+
+    # (2) expand level bits into one-hot leaf indicators, tree-blocked to
+    # bound the VMEM working set, and contract with the leaf table
+    acc = jnp.zeros((bn,), dtype=jnp.float32)
+    n_blocks = n_trees // block_trees
+    for tb in range(n_blocks):            # static unroll (n_trees is static)
+        s = tb * block_trees
+        b_blk = jax.lax.slice_in_dim(bits, s, s + block_trees, axis=1)
+        leaf_blk = jax.lax.slice_in_dim(leaf, s, s + block_trees, axis=0)
+        # deepest level first: the concat expansion builds the leaf index
+        # MSB-last, and level 0 is the MSB (see ref.py)
+        p = jnp.ones((bn, block_trees, 1), dtype=jnp.float32)
+        for level in reversed(range(depth)):
+            b = jax.lax.slice_in_dim(b_blk, level, level + 1, axis=2)
+            p = jnp.concatenate([p * (1.0 - b), p * b], axis=-1)
+        acc = acc + jnp.einsum("ntj,tj->n", p, leaf_blk)
+
+    out_ref[...] = base_ref[0, 0] + acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "block_n", "block_trees", "interpret"))
+def gbdt_logits_pallas(
+    x: jnp.ndarray,       # (N, F) float32, N % block_n == 0, F padded
+    sel: jnp.ndarray,     # (F, T*D) float32
+    thr: jnp.ndarray,     # (1, T*D) float32
+    leaf: jnp.ndarray,    # (T, 2**D) float32, T % block_trees == 0
+    base: jnp.ndarray,    # (1, 1) float32
+    *,
+    depth: int,
+    block_n: int = 128,
+    block_trees: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n, f = x.shape
+    td = sel.shape[1]
+    t = leaf.shape[0]
+    assert n % block_n == 0 and t % block_trees == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_gbdt_kernel, depth=depth, block_trees=block_trees),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),      # x: stream
+            pl.BlockSpec((f, td), lambda i: (0, 0)),           # sel: resident
+            pl.BlockSpec((1, td), lambda i: (0, 0)),           # thr: resident
+            pl.BlockSpec((t, leaf.shape[1]), lambda i: (0, 0)),  # leaf
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),            # base
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, sel, thr, leaf, base)

@@ -1,0 +1,292 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+#   init, and the production meshes below need 512 placeholder devices.
+#   (setdefault so a harness that already forced a device count — e.g. the
+#   8-device mechanism test — keeps its setting.)
+
+"""Multi-pod dry-run.
+
+For every runnable (architecture x input shape) cell and each production
+mesh (single-pod 16x16, multi-pod 2x16x16):
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+and records the roofline terms to JSON (EXPERIMENTS.md §Dry-run reads
+these). Failures here are sharding bugs by definition.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, get_arch, list_archs
+from repro.config.types import ArchConfig, ParallelConfig, RunConfig, ShapeConfig
+from repro.launch.input_specs import input_specs, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import build_model
+from repro.models.param import abstract
+from repro.parallel.constraints import default_rules, set_activation_rules
+from repro.parallel.sharding import (batch_pspec, cache_pspec, param_pspecs,
+                                     sanitize_pspec, sanitized_shardings)
+from repro.roofline.analysis import analyze_compiled
+from repro.roofline.model_flops import model_flops
+from repro.train.state import TrainState
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results")
+
+
+def parallel_for(cfg: ArchConfig, shape: ShapeConfig) -> ParallelConfig:
+    """Per-arch distribution knobs (documented in EXPERIMENTS.md).
+
+    Env overrides for §Perf iterations:
+      REPRO_SEQ_SHARD=1      sequence-shard the residual stream over "model"
+      REPRO_MICROBATCHES=N   gradient-accumulate over N microbatches
+      REPRO_REMAT=none|dots|full
+    """
+    n = cfg.param_count()
+    big = n > 60e9
+    # optimized defaults from the §Perf iterations: sequence-parallel
+    # residual streams for >=2.7B (16x smaller layer-carry remat stack;
+    # measured wins down to recurrentgemma-2b), 4-way microbatching for
+    # the XXL archs (live activations /4)
+    seq_shard_default = "1" if n > 2.7e9 else "0"
+    micro_default = "4" if big else "1"
+    return ParallelConfig(
+        fsdp=True,
+        remat=os.environ.get(
+            "REPRO_REMAT", "full" if shape.kind == "train" else "none"),
+        scan_layers=True,
+        microbatches=int(os.environ.get("REPRO_MICROBATCHES",
+                                        micro_default if shape.kind == "train"
+                                        else "1")),
+        opt_state_dtype="bfloat16" if big else "float32",
+        seq_shard_attn=os.environ.get("REPRO_SEQ_SHARD",
+                                      seq_shard_default) == "1",
+    )
+
+
+# canonical implementations live in parallel.sharding; aliased here for
+# backwards compatibility with earlier sweep scripts
+_sanitize = sanitize_pspec
+_shardings = sanitized_shardings
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = RESULTS_DIR, verbose: bool = True):
+    cfg = get_arch(arch_name)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    reason = skip_reason(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name}
+    if reason is not None:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        _write(record, out_dir)
+        if verbose:
+            print(f"[skip] {arch_name} x {shape_name}: {reason}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    parallel = parallel_for(cfg, shape)
+    run = RunConfig(arch=cfg, shape=shape, parallel=parallel)
+    model = build_model(cfg, scan_layers=parallel.scan_layers)
+
+    # install activation-sharding rules for this mesh (batch axis only when
+    # the global batch divides it — long_500k runs batch-replicated)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    divisible = all(shape.global_batch % mesh.shape[a] == 0
+                    for a in batch_axes) and shape.global_batch >= _prod(
+                        [mesh.shape[a] for a in batch_axes])
+    rules = default_rules(mesh, batch_divisible=divisible)
+    if shape.is_serve and cfg.n_heads:
+        # match the cache layout chosen by parallel.sharding.cache_pspec
+        model_size = mesh.shape["model"]
+        if cfg.n_kv_heads % model_size == 0:
+            rules["act_kv_heads"] = "model"
+        elif cfg.resolved_head_dim % model_size == 0 and not divisible:
+            pass        # long-context: cache seq-sharded, leave q replicated
+        elif cfg.resolved_head_dim % model_size == 0:
+            rules["act_head_dim"] = "model"
+    if parallel.seq_shard_attn and shape.kind == "train":
+        # Megatron-style sequence parallelism: the residual stream between
+        # blocks is sharded over "model"; attention/MLP projections
+        # all-gather it locally. Cuts the layer-carry remat stack by the
+        # model-axis size (§Perf iteration on command-r).
+        rules["act_seq"] = "model"
+    set_activation_rules(rules)
+
+    params_abs = model.abstract_params()
+    p_pspecs = param_pspecs(model, parallel)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, run)
+            state_abs = {
+                "params": params_abs,
+                "opt": {
+                    "m": jax.tree_util.tree_map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            s.shape, jnp.dtype(parallel.opt_state_dtype)),
+                        params_abs),
+                    "v": jax.tree_util.tree_map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            s.shape, jnp.dtype(parallel.opt_state_dtype)),
+                        params_abs),
+                    "count": jax.ShapeDtypeStruct((), jnp.int32),
+                },
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            state_sh = {
+                "params": _shardings(params_abs, p_pspecs, mesh),
+                "opt": {
+                    "m": _shardings(params_abs, p_pspecs, mesh),
+                    "v": _shardings(params_abs, p_pspecs, mesh),
+                    "count": NamedSharding(mesh, P()),
+                },
+                "step": NamedSharding(mesh, P()),
+            }
+            batch_abs = input_specs(model, shape)["batch"]
+            b_pspecs = batch_pspec(cfg, shape, mesh)
+            batch_sh = _shardings(batch_abs, b_pspecs, mesh)
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+            ).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, run)
+            batch_abs = input_specs(model, shape)["batch"]
+            b_pspecs = {k: v for k, v in batch_pspec(cfg, shape, mesh).items()
+                        if k in batch_abs}
+            batch_sh = _shardings(batch_abs, b_pspecs, mesh)
+            param_sh = _shardings(params_abs, p_pspecs, mesh)
+            lowered = jax.jit(
+                step, in_shardings=(param_sh, batch_sh),
+            ).lower(params_abs, batch_abs)
+        else:  # decode / long_decode
+            step = make_decode_step(model, run)
+            specs = input_specs(model, shape)
+            param_sh = _shardings(params_abs, p_pspecs, mesh)
+            c_pspecs = cache_pspec(model, shape, mesh)
+            cache_sh = _shardings(specs["cache"], c_pspecs, mesh)
+            batch_axes = tuple(a for a in ("pod", "data")
+                               if a in mesh.axis_names)
+            bsz = shape.global_batch
+            tok_axes = batch_axes if all(
+                bsz % mesh.shape[a] == 0 for a in batch_axes) and _prod(
+                [mesh.shape[a] for a in batch_axes]) <= bsz else ()
+            tok_sh = NamedSharding(mesh, P(tok_axes or None))
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, tok_sh, cache_sh, tok_sh),
+                out_shardings=(tok_sh, None, cache_sh),
+            ).lower(params_abs, specs["tokens"], specs["cache"],
+                    specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"=== {arch_name} x {shape_name} x {mesh_name} ===")
+        print(f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("memory_analysis:", mem)
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0))))
+
+    report = analyze_compiled(
+        compiled, None, arch_name, shape_name, mesh_name, chips,
+        model_flops(cfg, shape))
+    record.update(report.to_dict())
+    record["status"] = "ok"
+    record["lower_s"] = t_lower
+    record["compile_s"] = t_compile
+    _write(record, out_dir)
+    if verbose:
+        print(f"terms: compute={report.t_compute:.4f}s "
+              f"memory={report.t_memory:.4f}s "
+              f"collective={report.t_collective:.4f}s "
+              f"-> bottleneck={report.bottleneck} "
+              f"roofline_frac={report.roofline_fraction:.3f}")
+    return record
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _write(record, out_dir):
+    if out_dir is None:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.single_pod and not args.multi_pod:
+        meshes = [False]
+    elif args.multi_pod and not args.single_pod:
+        meshes = [True]
+    else:
+        meshes = [False, True]
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                run_cell(a, s, mp, out_dir=args.out)
+            except Exception as e:
+                failures.append((a, s, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

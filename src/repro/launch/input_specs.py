@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run food).
+
+Weak-type-correct, shardable, zero allocation. ``decode_*`` / ``long_*``
+shapes produce (tokens, cache, positions) for ``serve_step``; train/prefill
+produce the batch dict for ``train_step`` / ``prefill_step``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig, Family, ShapeConfig
+from repro.models.lm import LanguageModel
+
+SDS = jax.ShapeDtypeStruct
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> str | None:
+    """Why a cell is skipped (DESIGN.md §5 table), or None if runnable."""
+    if not cfg.decoder and shape.kind in ("decode", "long_decode"):
+        return "encoder-only: no decode step"
+    if shape.kind == "long_decode" and not cfg.sub_quadratic:
+        return "pure full attention: long_500k requires sub-quadratic"
+    return None
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      with_labels: bool = True) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == Family.AUDIO:
+        out = {"frames": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+        if with_labels:
+            out["labels"] = SDS((b, s), jnp.int32)
+        return out
+    if cfg.family == Family.VLM:
+        t = s - cfg.frontend_tokens
+        out = {"tokens": SDS((b, t), jnp.int32),
+               "patches": SDS((b, cfg.frontend_tokens, cfg.d_model),
+                              jnp.bfloat16)}
+        if with_labels:
+            out["labels"] = SDS((b, t), jnp.int32)
+        return out
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(model: LanguageModel, shape: ShapeConfig,
+                 cache_dtype=jnp.bfloat16) -> Tuple[Any, Any, Any]:
+    b = shape.global_batch
+    tokens = SDS((b,), jnp.int32)
+    cache = model.cache_spec(b, shape.seq_len, dtype=cache_dtype)
+    pos = SDS((b,), jnp.int32)
+    return tokens, cache, pos
+
+
+def input_specs(model: LanguageModel, shape: ShapeConfig) -> Dict[str, Any]:
+    """All stand-ins for one (arch x shape) cell, keyed by role."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": train_batch_specs(cfg, shape, with_labels=False)}
+    tokens, cache, pos = decode_specs(model, shape)
+    return {"tokens": tokens, "cache": cache, "pos": pos}

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as one composable LM stack."""
+from repro.models.param import ParamSpec, materialize, abstract, spec_tree_map
+from repro.models.lm import LanguageModel, build_model
+
+__all__ = ["ParamSpec", "materialize", "abstract", "spec_tree_map",
+           "LanguageModel", "build_model"]

@@ -1,0 +1,262 @@
+"""Attention blocks: GQA (full / sliding / bidirectional) and MLA.
+
+Train/prefill go through the flash-attention op (XLA oracle by default,
+Pallas kernel on TPU); decode goes through the decode-attention op against
+a KV cache. Sliding-window archs keep a ring-buffer cache of window size
+(keys stored pre-rotated at absolute positions, so buffer order is
+irrelevant) — this is what makes ``long_500k`` decode O(window) memory.
+
+MLA (DeepSeek-V3): low-rank Q/KV projections with decoupled RoPE keys.
+Decode uses the *absorbed* formulation — queries are absorbed into the
+latent space, attention runs against the compressed (kv_lora + rope) cache,
+and values are expanded after the softmax — so the cache stays at
+(kv_lora + rope_dim) per token regardless of head count.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig, AttentionKind
+from repro.models import runtime_flags
+from repro.models.layers import apply_rope, norm_apply, norm_spec
+from repro.models.param import ParamSpec
+from repro.parallel.constraints import constrain
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import decode_attention
+
+
+# ------------------------------------------------------------------ GQA spec
+def attn_spec(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    if cfg.attention == AttentionKind.MLA:
+        m = cfg.mla
+        return {
+            "wq_a": ParamSpec((d, m.q_lora_rank), ("embed", None)),
+            "q_norm": norm_spec(cfg, m.q_lora_rank),
+            "wq_b": ParamSpec((m.q_lora_rank, cfg.n_heads * m.qk_head_dim),
+                              (None, "heads")),
+            "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                               ("embed", None)),
+            "kv_norm": norm_spec(cfg, m.kv_lora_rank),
+            "wkv_b": ParamSpec(
+                (m.kv_lora_rank,
+                 cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)),
+                (None, "heads")),
+            "wo": ParamSpec((cfg.n_heads * m.v_head_dim, d),
+                            ("heads", "embed")),
+        }
+    spec = {
+        "wq": ParamSpec((d, cfg.n_heads * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((cfg.n_heads * hd, d), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        spec["bq"] = ParamSpec((cfg.n_heads * hd,), ("heads",), init="zeros")
+        spec["bk"] = ParamSpec((cfg.n_kv_heads * hd,), ("kv_heads",),
+                               init="zeros")
+        spec["bv"] = ParamSpec((cfg.n_kv_heads * hd,), ("kv_heads",),
+                               init="zeros")
+        spec["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+    return spec
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, hd = x.shape
+    return x.reshape(b, s, n_heads, hd // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+# ------------------------------------------------------------ GQA full pass
+def attn_apply(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,                       # (B, S, E)
+    positions: Optional[jnp.ndarray] = None,
+    window_override: Optional[int] = None,
+) -> jnp.ndarray:
+    if cfg.attention == AttentionKind.MLA:
+        return _mla_apply(params, cfg, x, positions)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = _split_heads(q, cfg.n_heads)
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    # q heads shard over "model"; kv heads often < model size, so kv stays
+    # on the fused-projection sharding XLA picks (replicated worst-case).
+    # seq stays local here even under sequence-parallel residual streams
+    # (attention needs the full sequence per head).
+    q = constrain(q, ("act_batch", "act_model", None, None))
+    if positions is None:
+        positions = jnp.arange(s)
+    if cfg.attention != AttentionKind.BIDIR:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    causal = cfg.attention != AttentionKind.BIDIR
+    window = window_override if window_override is not None else (
+        cfg.sliding_window if cfg.attention == AttentionKind.SLIDING else 0)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          backend=runtime_flags.ATTN_BACKEND,
+                          interpret=runtime_flags.PALLAS_INTERPRET)
+    out = constrain(out, ("act_batch", "act_model", None, None))
+    y = _merge_heads(out) @ params["wo"]
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# ------------------------------------------------------------- GQA decode
+def attn_cache_spec(cfg: ArchConfig, batch: int, cache_len: int,
+                    window_override: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> Dict:
+    """KV cache ShapeDtypeStructs for one layer."""
+    hd = cfg.resolved_head_dim
+    if cfg.attention == AttentionKind.MLA:
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, cache_len, m.kv_lora_rank),
+                                        dtype),
+            "krope": jax.ShapeDtypeStruct(
+                (batch, cache_len, m.qk_rope_head_dim), dtype),
+            "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        }
+    window = window_override if window_override is not None else (
+        cfg.sliding_window if cfg.attention == AttentionKind.SLIDING else 0)
+    eff = min(cache_len, window) if window > 0 else cache_len
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, eff, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, eff, hd), dtype),
+        "length": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def attn_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,                       # (B, 1, E)
+    cache: Dict,
+    pos: jnp.ndarray,                     # (B,) absolute positions
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.attention == AttentionKind.MLA:
+        return _mla_decode(params, cfg, x, cache, pos)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ params["wq"]
+                     + (params.get("bq", 0.0)), cfg.n_heads)       # (B,H,1,hd)
+    k = _split_heads(x @ params["wk"] + (params.get("bk", 0.0)),
+                     cfg.n_kv_heads)
+    v = _split_heads(x @ params["wv"] + (params.get("bv", 0.0)),
+                     cfg.n_kv_heads)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    cache_len = cache["k"].shape[2]
+    slot = cache["length"] % cache_len          # ring-buffer slot per batch
+    bidx = jnp.arange(b)
+    new_k = cache["k"].at[bidx, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+    new_len = cache["length"] + 1
+    valid = jnp.minimum(new_len, cache_len)
+
+    out = decode_attention(q[:, :, 0], new_k, new_v, lengths=valid,
+                           backend=runtime_flags.ATTN_BACKEND,
+                           interpret=runtime_flags.PALLAS_INTERPRET)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    if "bo" in params:
+        y = y + params["bo"]
+    return y, {"k": new_k, "v": new_v, "length": new_len}
+
+
+# ----------------------------------------------------------------- MLA paths
+def _mla_project(params, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    q = norm_apply(params["q_norm"], cfg, x @ params["wq_a"]) @ params["wq_b"]
+    q = q.reshape(b, s, cfg.n_heads, m.qk_head_dim).transpose(0, 2, 1, 3)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]                            # (B,S,lora+rope)
+    ckv = norm_apply(params["kv_norm"], cfg, kv_a[..., :m.kv_lora_rank])
+    k_rope = apply_rope(kv_a[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_apply(params, cfg, x, positions):
+    """Train/prefill: expand the latent KV and run standard attention."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope, ckv, k_rope = _mla_project(params, cfg, x, positions)
+    kv = ckv @ params["wkv_b"]
+    kv = kv.reshape(b, s, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    kv = kv.transpose(0, 2, 1, 3)
+    k_nope = kv[..., :m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    # decoupled-rope key shared across heads
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, None], (b, cfg.n_heads, s, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = float(m.qk_head_dim) ** -0.5
+    # pad v to qk_head_dim so the flash kernel sees uniform D, then slice
+    pad = m.qk_head_dim - m.v_head_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = flash_attention(q, k, v_p, causal=True, scale=scale,
+                          backend=runtime_flags.ATTN_BACKEND,
+                          interpret=runtime_flags.PALLAS_INTERPRET)
+    out = out[..., :m.v_head_dim]
+    return _merge_heads(out) @ params["wo"]
+
+
+def _mla_decode(params, cfg, x, cache, pos):
+    """Absorbed decode against the compressed (ckv, k_rope) cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    q_nope, q_rope, ckv_new, krope_new = _mla_project(
+        params, cfg, x, pos[:, None])
+    # absorb W_kv_b's key half into the query: q_lat = q_nope @ W_uk^T
+    wkv_b = params["wkv_b"].reshape(
+        m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]          # (lora, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]          # (lora, H, v)
+    q_lat = jnp.einsum("bhqd,lhd->bhql", q_nope, w_uk)   # (B,H,1,lora)
+
+    cache_len = cache["ckv"].shape[1]
+    slot = cache["length"] % cache_len
+    bidx = jnp.arange(b)
+    new_ckv = cache["ckv"].at[bidx, slot].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    new_krope = cache["krope"].at[bidx, slot].set(
+        krope_new[:, 0].astype(cache["krope"].dtype))
+    new_len = cache["length"] + 1
+    valid = jnp.minimum(new_len, cache_len)
+
+    scale = float(m.qk_head_dim) ** -0.5
+    logits = (jnp.einsum("bhql,bsl->bhqs", q_lat.astype(jnp.float32),
+                         new_ckv.astype(jnp.float32))
+              + jnp.einsum("bhqd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           new_krope.astype(jnp.float32))) * scale
+    mask = jnp.arange(cache_len)[None, None, None, :] < valid[:, None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    lat = jnp.einsum("bhqs,bsl->bhql", probs,
+                     new_ckv.astype(jnp.float32))          # (B,H,1,lora)
+    out = jnp.einsum("bhql,lhd->bhqd", lat, w_uv.astype(jnp.float32))
+    y = _merge_heads(out.astype(x.dtype)) @ params["wo"]
+    return y, {"ckv": new_ckv, "krope": new_krope, "length": new_len}

@@ -1,0 +1,132 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig
+from repro.models.param import ParamSpec
+from repro.parallel.constraints import constrain
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------- norms
+def norm_spec(cfg: ArchConfig, dim: Optional[int] = None) -> Dict:
+    d = dim or cfg.d_model
+    spec = {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm" and cfg.use_bias:
+        spec["bias"] = ParamSpec((d,), ("embed",), init="zeros")
+    return spec
+
+
+def norm_apply(params: Dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(F32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    y = y * params["scale"].astype(F32)
+    if "bias" in params:
+        y = y + params["bias"].astype(F32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_spec(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict:
+    """Gated (SwiGLU/GeGLU) for silu/gelu llama-family; plain for HuBERT."""
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.family.value == "audio":
+        spec = {
+            "wi": ParamSpec((d, f), ("embed", "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed")),
+        }
+        if cfg.use_bias:
+            spec["bi"] = ParamSpec((f,), ("ffn",), init="zeros")
+            spec["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+        return spec
+    return {
+        "wg": ParamSpec((d, f), ("embed", "ffn")),
+        "wi": ParamSpec((d, f), ("embed", "ffn")),
+        "wo": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def _act(cfg: ArchConfig, x):
+    return jax.nn.silu(x) if cfg.activation == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(params: Dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if "wg" in params:
+        g = _act(cfg, x @ params["wg"])
+        h = g * (x @ params["wi"])
+        h = constrain(h, ("act_batch", None, "act_model"))
+        return h @ params["wo"]
+    h = x @ params["wi"]
+    if "bi" in params:
+        h = h + params["bi"]
+    h = _act(cfg, h)
+    h = constrain(h, ("act_batch", None, "act_model"))
+    y = h @ params["wo"]
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# ----------------------------------------------------------------- embedding
+def embed_spec(cfg: ArchConfig) -> Dict:
+    spec = {"tokens": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                ("vocab", "embed"), init_scale=1.0)}
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    if cfg.frontend is not None:
+        # modality stub: precomputed frame/patch embeddings -> d_model
+        spec["frontend_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                          ("embed", None))
+    return spec
+
+
+def embed_tokens(params: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Activations follow the parameter dtype (bf16 at scale, f32 in tests)."""
+    return params["tokens"][tokens]
+
+
+def embed_frontend(params: Dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """Project precomputed modality embeddings into the LM stream."""
+    proj = params["frontend_proj"]
+    return feats.astype(proj.dtype) @ proj
+
+
+def lm_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "head" in params:
+        return x @ params["head"]
+    return x @ params["tokens"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_angles(positions: jnp.ndarray, dim: int,
+                theta: float) -> jnp.ndarray:
+    """(..., dim/2) rotary angles for absolute positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim))
+    return positions.astype(F32)[..., None] * freqs
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, H, S, D) or (B, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)           # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == 4 and cos.ndim == 3:                # add head axis
+        cos, sin = cos[:, None], sin[:, None]
+    elif x.ndim == 4 and cos.ndim == 2:
+        cos, sin = cos[None, None], sin[None, None]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

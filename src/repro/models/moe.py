@@ -1,0 +1,148 @@
+"""Mixture-of-experts block (moonshot 64e/top-6, deepseek 256e/top-8).
+
+TPU-native sort-based dispatch (no (T, E, C) one-hot): token-expert
+assignments are sorted by expert, packed into a static-capacity
+(E, C, d) buffer, run through a batched expert FFN einsum with the expert
+dim sharded over the "model" mesh axis (expert parallelism — the scatter/
+gather pair partitions into an all-to-all), then combined with the router
+weights. Overflow beyond capacity is dropped (capacity_factor 1.25),
+matching Switch/Mixtral-style static shapes that XLA SPMD partitions well.
+
+Shared experts (DeepSeek) are plain dense MLPs added to every token.
+The router aux loss (load balancing) is returned for the train loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig
+from repro.models.layers import _act
+from repro.models.param import ParamSpec
+from repro.parallel.constraints import constrain
+
+
+def moe_spec(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    m = cfg.moe
+    f = m.d_ff_expert
+    # expert dim -> "model" (expert parallelism); embed dim -> "data" under
+    # FSDP. The per-expert ffn dim stays unsharded — sharding it would
+    # collide with the experts dim on the same mesh axis.
+    spec = {
+        "router": ParamSpec((d, m.n_experts), ("embed", None),
+                            dtype=jnp.float32),
+        "wg": ParamSpec((m.n_experts, d, f), ("experts", "embed", None)),
+        "wi": ParamSpec((m.n_experts, d, f), ("experts", "embed", None)),
+        "wo": ParamSpec((m.n_experts, f, d), ("experts", None, "embed")),
+    }
+    for i in range(m.n_shared_experts):
+        spec[f"shared{i}"] = {
+            "wg": ParamSpec((d, f), ("embed", "ffn")),
+            "wi": ParamSpec((d, f), ("embed", "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    return spec
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    cap = int(n_tokens * m.top_k / m.n_experts * m.capacity_factor)
+    return max(_round_up(cap, 8), 8)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _dispatch_one_group(xt, top_i, top_p, cap: int, e: int, k: int):
+    """Sort-based dispatch for ONE token group (vmapped over groups).
+
+    Keeping the sort/gather/scatter *within* a group (= one batch row,
+    sharded over "data") means no cross-shard sort collectives: the only
+    cross-device traffic of the MoE layer is the (G, E, C, d) buffer's
+    group<->expert resharding — a clean all-to-all. The global-argsort
+    formulation this replaced forced XLA into full-replication gathers
+    ("involuntary full rematerialization"), ~100x the collective bytes
+    (EXPERIMENTS.md §Perf iteration 1).
+    """
+    t = xt.shape[0]
+    d = xt.shape[1]
+    flat_e = top_i.reshape(-1)                                    # (t*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    ranks = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = ranks < cap
+    slots = jnp.where(keep, sorted_e * cap + ranks, e * cap)
+    tok_of = order // k
+    gathered = xt[tok_of]
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slots].set(
+        jnp.where(keep[:, None], gathered, 0))
+    return buf[:-1].reshape(e, cap, d), slots, tok_of, keep, order
+
+
+def _combine_one_group(out, top_p, slots, tok_of, keep, order,
+                       t: int, k: int):
+    e, cap, d = out.shape
+    flat_out = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    per_assign = flat_out[slots]
+    w = top_p.reshape(-1)[order]
+    y = jnp.zeros((t, d), out.dtype).at[tok_of].add(
+        per_assign * jnp.where(keep, w, 0.0)[:, None].astype(out.dtype))
+    return y
+
+
+def moe_apply(params: Dict, cfg: ArchConfig,
+              x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Grouped (per-batch-row) dispatch."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.top_k
+    e = m.n_experts
+
+    logits = (x.astype(jnp.float32) @ params["router"])           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # (B, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e (global)
+    token_frac = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (b * s * k))
+    prob_frac = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(token_frac * prob_frac) * m.router_aux_loss
+
+    # ---- grouped dispatch: one group per batch row ---------------------------
+    cap = _capacity(s, cfg)
+    buf, slots, tok_of, keep, order = jax.vmap(
+        lambda xt, ti, tp: _dispatch_one_group(xt, ti, tp, cap, e, k)
+    )(x, top_i, top_p)
+    # groups (batch rows) shard over data; experts shard over model => the
+    # pjit partitioner turns this boundary into the MoE all-to-all
+    buf = constrain(buf, ("act_batch", "act_model", None, None))
+
+    # ---- expert FFN (einsum over the expert dim => EP shards it) -------------
+    g = _act(cfg, jnp.einsum("gecd,edf->gecf", buf, params["wg"]))
+    h = g * jnp.einsum("gecd,edf->gecf", buf, params["wi"])
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    out = constrain(out, ("act_batch", "act_model", None, None))
+
+    # ---- combine --------------------------------------------------------------
+    y = jax.vmap(
+        lambda o, tp, sl, to, ke, od: _combine_one_group(o, tp, sl, to, ke,
+                                                         od, s, k)
+    )(out, top_p, slots, tok_of, keep, order)
+    y = constrain(y, ("act_batch", "act_seq", None))
+
+    # ---- shared experts --------------------------------------------------------
+    for i in range(m.n_shared_experts):
+        p = params[f"shared{i}"]
+        gsh = _act(cfg, x @ p["wg"])
+        y = y + (gsh * (x @ p["wi"])) @ p["wo"]
+
+    return y, aux

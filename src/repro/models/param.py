@@ -1,0 +1,93 @@
+"""Parameter specs: one source of truth for shape, init and sharding.
+
+Every model module builds a pytree of :class:`ParamSpec` leaves. From it:
+
+* ``materialize(specs, key)``   -> real arrays (smoke tests, examples);
+* ``abstract(specs)``           -> ShapeDtypeStructs (the dry-run — no
+  allocation, exactly the shannon/kernels stand-in pattern);
+* ``logical_to_pspec(specs, rules)`` -> jax.sharding PartitionSpec tree
+  (the distribution layer maps logical axes to mesh axes).
+
+Logical axis vocabulary (see parallel/sharding.py for the mesh mapping):
+  "vocab", "embed", "heads", "kv_heads", "ffn", "experts", "inner",
+  "state", "layers", plus None for replicated dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]         # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                    # normal | zeros | ones | scaled
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+    def with_leading(self, n: int, axis: str = "layers") -> "ParamSpec":
+        """Stack for scan-over-layers."""
+        return dataclasses.replace(
+            self, shape=(n,) + self.shape, axes=(axis,) + self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct stand-ins — zero allocation, dry-run food."""
+    return spec_tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def materialize(tree, key: jax.Array, dtype=None):
+    """Real arrays for smoke tests / small training runs."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = dtype or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            scale = s.init_scale / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def logical_to_pspec(tree, rules: Dict[str, Any]):
+    """Map each leaf's logical axes to a PartitionSpec via `rules`.
+
+    rules: logical axis name -> mesh axis (str), tuple of mesh axes, or None.
+    Unknown logical names map to None (replicated).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(s: ParamSpec):
+        return P(*[rules.get(a) if a is not None else None for a in s.axes])
+
+    return spec_tree_map(one, tree)
+
+
+def count_tree_params(tree) -> int:
+    leaves, _ = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

@@ -1,0 +1,105 @@
+"""RecurrentGemma RG-LRU recurrent block (Griffin, arXiv:2402.19427).
+
+Block = two branches: (linear -> causal conv1d -> RG-LRU) * (linear -> GeLU)
+-> merge -> linear out. The RG-LRU gate:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill evaluate the linear recurrence with an associative scan
+(log-depth on TPU); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig
+from repro.models.param import ParamSpec
+
+F32 = jnp.float32
+_C = 8.0
+
+
+def rglru_spec(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width
+    cw = cfg.rglru.conv_width
+    return {
+        "in_y": ParamSpec((d, w), ("embed", "inner")),
+        "in_gate": ParamSpec((d, w), ("embed", "inner")),
+        "conv_w": ParamSpec((cw, w), (None, "inner")),
+        "conv_b": ParamSpec((w,), ("inner",), init="zeros"),
+        "wa": ParamSpec((w, w), (None, "inner")),
+        "ba": ParamSpec((w,), ("inner",), init="zeros"),
+        "wx": ParamSpec((w, w), (None, "inner")),
+        "bx": ParamSpec((w,), ("inner",), init="zeros"),
+        "lam": ParamSpec((w,), ("inner",), dtype=F32, init="ones"),
+        "out": ParamSpec((w, d), ("inner", "embed")),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x.astype(F32) @ params["wa"].astype(F32)
+                       + params["ba"].astype(F32))
+    i = jax.nn.sigmoid(x.astype(F32) @ params["wx"].astype(F32)
+                       + params["bx"].astype(F32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(F32))
+    return a, gated
+
+
+def _conv(params, x, s):
+    w = params["conv_w"].astype(x.dtype)
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + s, :] * w[i] for i in range(cw))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_apply(params: Dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Train/prefill. x: (B, S, d)."""
+    b, s, _ = x.shape
+    y = x @ params["in_y"]
+    y = _conv(params, y, s)
+    a, gated = _gates(params, y)                       # (b,s,w) each
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    gate = jax.nn.gelu(x @ params["in_gate"])
+    out = (h.astype(x.dtype) * gate) @ params["out"]
+    return out
+
+
+def rglru_cache_spec(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    w = cfg.rglru.lru_width
+    cw = cfg.rglru.conv_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, w), dtype),
+    }
+
+
+def rglru_decode(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                 cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """O(1) step. x: (B, 1, d)."""
+    y = (x @ params["in_y"])[:, 0]                     # (b, w)
+    w = params["conv_w"].astype(y.dtype)
+    hist = jnp.concatenate([cache["conv"],
+                            y[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv = jnp.einsum("bwd,wd->bd", hist.astype(F32), w.astype(F32))
+    conv = conv + params["conv_b"].astype(F32)
+    a, gated = _gates(params, conv)                    # (b, w)
+    h = a * cache["h"] + gated
+    gate = jax.nn.gelu((x @ params["in_gate"])[:, 0])
+    out = ((h.astype(x.dtype) * gate) @ params["out"])[:, None, :]
+    return out, {"h": h, "conv": hist[:, 1:]}

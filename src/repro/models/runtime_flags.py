@@ -1,0 +1,15 @@
+"""Process-wide backend switches the launcher can flip.
+
+On TPU hardware the launcher sets ATTN_BACKEND="pallas"; on this CPU
+container everything defaults to the XLA oracle path so the 512-device
+SPMD dry-run can lower (Pallas interpret mode cannot be SPMD-partitioned).
+"""
+ATTN_BACKEND = "xla"          # "xla" | "pallas"
+PALLAS_INTERPRET = True       # interpret=True on CPU; False on real TPU
+
+
+def set_attention_backend(name: str) -> None:
+    global ATTN_BACKEND
+    if name not in ("xla", "pallas"):
+        raise ValueError(name)
+    ATTN_BACKEND = name

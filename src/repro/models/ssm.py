@@ -1,0 +1,208 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Train/prefill use the chunked block decomposition (paper Listing 1): the
+sequence is split into chunks; within-chunk terms are attention-shaped
+einsums (MXU-friendly), across-chunk terms are a short scan over chunk
+states — O(S * Q) work with O(S/Q) sequential steps instead of O(S^2) or a
+length-S scan. Decode is the O(1) recurrent update on the (H, P, N) state.
+
+Layout: x (B, S, H, P) heads, B/C shared across heads (ngroups=1),
+per-head scalar decay A (negative), discrete step dt via softplus.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ArchConfig
+from repro.models.param import ParamSpec
+
+F32 = jnp.float32
+
+
+def ssm_spec(cfg: ArchConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    heads = s.n_heads(d)
+    n = s.state_dim
+    conv_dim = inner + 2 * n            # conv over [x, B, C]
+    return {
+        # in_proj emits [z (inner), x (inner), B (n), C (n), dt (heads)]
+        "in_proj": ParamSpec((d, 2 * inner + 2 * n + heads),
+                             ("embed", "inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), (None, "inner")),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((heads,), (None,), dtype=F32, init="ones"),
+        "D": ParamSpec((heads,), (None,), dtype=F32, init="ones"),
+        "dt_bias": ParamSpec((heads,), (None,), dtype=F32, init="zeros"),
+        "norm_scale": ParamSpec((inner,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((inner, d), ("inner", "embed")),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) -> (..., L, L) lower-triangular segment sums:
+    out[i, j] = sum_{j < k <= i} a[k], -inf above the diagonal."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xdt, a, B, C, chunk: int):
+    """SSD block decomposition.
+
+    xdt: (b, s, h, p) inputs pre-multiplied by dt; a: (b, s, h) log-decay
+    per step; B, C: (b, s, n). Returns y: (b, s, h, p) and the final state
+    (b, h, p, n).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,nc,l)
+    a_cum = jnp.cumsum(ac, axis=-1)
+
+    # (1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))                                # (b,h,nc,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc.astype(F32), Bc.astype(F32), L,
+                        xc.astype(F32))
+
+    # (2) chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (b,h,nc,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc.astype(F32), decay_states, xc.astype(F32))
+
+    # (3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # (b,h,nc)
+
+    def step(prev, inp):
+        st, dec = inp                                        # (b,h,p,n),(b,h)
+        new = prev * dec[..., None, None] + st
+        return new, prev                                     # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p, n), F32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4),                    # (nc,b,h,p,n)
+         chunk_decay.transpose(2, 0, 1)))                    # (nc,b,h)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # (4) state -> output within each chunk
+    state_decay = jnp.exp(a_cum)                             # (b,h,nc,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc.astype(F32), prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_apply(params: Dict, cfg: ArchConfig,
+              x: jnp.ndarray) -> jnp.ndarray:
+    """Train/prefill. x: (B, S, d)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    inner = s_cfg.expand * d
+    heads = s_cfg.n_heads(d)
+    n = s_cfg.state_dim
+    p = s_cfg.head_dim
+
+    proj = x @ params["in_proj"]
+    z = proj[..., :inner]
+    xbc = proj[..., inner:inner + inner + 2 * n]
+    dt = proj[..., -heads:]
+
+    # causal depthwise conv over [x, B, C]
+    w = params["conv_w"].astype(xbc.dtype)                   # (cw, conv_dim)
+    cw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * w[i] for i in range(cw))
+    conv = jax.nn.silu(conv + params["conv_b"].astype(conv.dtype))
+
+    xs = conv[..., :inner].reshape(b, s, heads, p)
+    Bm = conv[..., inner:inner + n]
+    Cm = conv[..., inner + n:]
+
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])  # (b,s,h)
+    a = -jnp.exp(params["A_log"]) * dt                        # log decay
+    xdt = xs.astype(F32) * dt[..., None]
+
+    chunk = min(s_cfg.chunk_size, s)
+    if s % chunk:
+        chunk = 1
+    y, _ = ssd_chunked(xdt, a, Bm, Cm, chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(F32)
+    y = y.reshape(b, s, inner).astype(x.dtype)
+
+    # gated RMSNorm (mamba2 norm before out_proj)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_scale"].astype(F32)).astype(x.dtype)
+    return y @ params["out_proj"]
+
+
+def ssm_cache_spec(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    inner = s.expand * d
+    heads = s.n_heads(d)
+    conv_dim = inner + 2 * s.state_dim
+    return {
+        "state": jax.ShapeDtypeStruct((batch, heads, s.head_dim,
+                                       s.state_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim),
+                                     dtype),
+    }
+
+
+def ssm_decode(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+               cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """O(1) recurrent step. x: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    inner = s_cfg.expand * d
+    heads = s_cfg.n_heads(d)
+    n = s_cfg.state_dim
+    p = s_cfg.head_dim
+
+    proj = (x @ params["in_proj"])[:, 0]                      # (b, proj)
+    z = proj[..., :inner]
+    xbc = proj[..., inner:inner + inner + 2 * n]
+    dt = proj[..., -heads:]
+
+    w = params["conv_w"].astype(xbc.dtype)
+    hist = jnp.concatenate([cache["conv"],
+                            xbc[:, None, :].astype(cache["conv"].dtype)],
+                           axis=1)                            # (b, cw, dim)
+    conv = jnp.einsum("bwd,wd->bd", hist.astype(F32), w.astype(F32))
+    conv = jax.nn.silu(conv + params["conv_b"].astype(F32))
+    new_conv = hist[:, 1:]
+
+    xs = conv[..., :inner].reshape(b, heads, p)
+    Bm = conv[..., inner:inner + n]
+    Cm = conv[..., inner + n:]
+
+    dtv = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])  # (b,h)
+    decay = jnp.exp(-jnp.exp(params["A_log"]) * dtv)           # (b,h)
+    xdt = xs * dtv[..., None]                                  # (b,h,p)
+    new_state = (cache["state"] * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(F32)))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(F32))
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(b, inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_scale"].astype(F32)).astype(x.dtype)
+    y = (y @ params["out_proj"])[:, None, :]
+    return y, {"state": new_state, "conv": new_conv}

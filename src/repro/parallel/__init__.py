@@ -1,0 +1,13 @@
+from repro.parallel.sharding import (
+    param_rules,
+    param_pspecs,
+    batch_pspec,
+    cache_pspec,
+    make_shardings,
+)
+from repro.parallel.compression import quantize_int8, dequantize_int8
+
+__all__ = [
+    "param_rules", "param_pspecs", "batch_pspec", "cache_pspec",
+    "make_shardings", "quantize_int8", "dequantize_int8",
+]

@@ -1,0 +1,66 @@
+"""Gradient compression (beyond-paper distributed-optimization trick).
+
+int8 quantization with per-tensor scale and error feedback. Used by the
+pod-wise gradient exchange: quantize -> psum over the "pod" axis -> dequant.
+Cross-pod links are the slowest in a multi-pod fabric (DCI), so 4x smaller
+gradient payloads directly shrink the collective roofline term; error
+feedback keeps the quantization noise from biasing convergence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 values, f32 scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads):
+    return jax.tree_util.tree_map(quantize_int8, grads)
+
+
+def psum_compressed(grads, axis_name: str):
+    """Quantize, all-reduce int32 accumulators + scales, dequantize.
+
+    int8 payload is summed in int32 (no overflow for <= 2^23 shards), the
+    per-tensor scales are maxed — a conservative shared-scale scheme that
+    keeps the exchange at ~1/4 the bf16 bytes.
+    """
+    def one(g):
+        q, s = quantize_int8(g)
+        s_max = jax.lax.pmax(s, axis_name)
+        # requantize against the shared scale so the sum is coherent
+        q2 = jnp.clip(jnp.round(g.astype(jnp.float32) / s_max), -127, 127)
+        total = jax.lax.psum(q2.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total.astype(jnp.float32) * s_max / n).astype(g.dtype)
+
+    return jax.tree_util.tree_map(one, grads)
+
+
+def error_feedback_update(grads, residual):
+    """Add the carried quantization residual, return (to_send, new_residual)."""
+    def one(g, r):
+        pre = g.astype(jnp.float32) + r
+        q, s = quantize_int8(pre)
+        sent = dequantize_int8(q, s)
+        return sent.astype(g.dtype), pre - sent
+
+    flat = jax.tree_util.tree_map(one, grads, residual)
+    sent = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_res

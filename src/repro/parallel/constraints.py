@@ -1,0 +1,50 @@
+"""Activation sharding constraints (MaxText-style).
+
+Model code annotates activations with *logical* axes; the launcher
+installs concrete rules (mesh-dependent) before lowering. Without rules
+(smoke tests, single device) the constraints are no-ops.
+
+Logical activation axes:
+  act_batch  -> ("pod", "data")   (or () for batch-1 long decode)
+  act_model  -> "model"           (heads / ffn / vocab activations)
+  act_seq    -> None              (or "model"/"data" for seq-sharded modes)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Optional[Dict[str, object]] = None
+
+
+def set_activation_rules(rules: Optional[Dict[str, object]]) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def get_activation_rules():
+    return _RULES
+
+
+def constrain(x, axes):
+    """axes: tuple of logical names (or None) per dim of x."""
+    if _RULES is None:
+        return x
+    spec = P(*[(_RULES.get(a) if a is not None else None) for a in axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def default_rules(mesh, batch_divisible: bool = True) -> Dict[str, object]:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return {
+        "act_batch": batch_axes if batch_divisible and batch_axes else None,
+        "act_model": "model",
+        "act_seq": None,
+        # decode-path rules, set per-arch by the launcher to MATCH the KV
+        # cache layout (kv-heads sharded when divisible, else head_dim):
+        # a mismatched query forces XLA to all-gather the whole cache.
+        "act_kv_heads": None,
+        "act_head_dim": None,
+    }

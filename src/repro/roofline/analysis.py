@@ -1,0 +1,178 @@
+"""Roofline terms from the compiled dry-run artifact (no real hardware).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` gives per-device FLOPs and bytes accessed
+(the compiled module is the per-device SPMD program). Collective bytes are
+parsed from ``compiled.as_text()`` post-partitioning: we sum the output
+shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute op (per-device payload; ring-transfer multipliers are
+discussed in EXPERIMENTS.md §Roofline assumptions).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip (TPU v5e)
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: float = 16e9          # v5e HBM capacity
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    peak_memory_per_device: Optional[float]
+    model_flops: float               # 6*N*D (analytic, global)
+    hw: HW = field(default_factory=HW)
+
+    # --- the three terms (seconds) -------------------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / dominant-term time (the score)."""
+        t_useful = (self.model_flops / self.chips) / self.hw.peak_flops
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """'bf16[16,512]' -> bytes. Tuple types handled by the caller."""
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return float(n * _DTYPE_BYTES[dt])
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op, by kind."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # HLO line form:  %name = TYPE op-name(...), or fusion-wrapped
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[\w\[\],]+))\s+([\w-]+)",
+                      stripped)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if op == k or op.startswith(k + "-") or op.startswith(k + "."):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if type_str.startswith("("):
+            total = sum(_shape_bytes(t)
+                        for t in type_str.strip("()").split(" ") if t)
+        else:
+            total = _shape_bytes(type_str)
+        out[kind] += total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def analyze_compiled(compiled, lowered_text: Optional[str],
+                     arch: str, shape: str, mesh: str, chips: int,
+                     model_flops: float, hw: HW = HW()) -> RooflineReport:
+    """Costs come from the trip-count-aware HLO parser: XLA's own
+    cost_analysis() counts while bodies once (verified in tests), which
+    would under-count scan-over-layers programs by ~n_layers."""
+    from repro.roofline.hlo_parser import analyze_hlo
+    try:
+        mem = compiled.memory_analysis()
+        peak = None
+        if mem is not None:
+            peak = float(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = None
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    cost = analyze_hlo(text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops_per_device=cost.flops, bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.collective_bytes,
+        collective_breakdown=dict(cost.collectives),
+        peak_memory_per_device=peak,
+        model_flops=model_flops, hw=hw)

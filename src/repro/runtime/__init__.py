@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    ClusterMonitor,
+    ElasticPlan,
+    StragglerDetector,
+)
+
+__all__ = ["ClusterMonitor", "ElasticPlan", "StragglerDetector"]

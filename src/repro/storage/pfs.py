@@ -1,0 +1,109 @@
+"""The server side: OSTs with shared service queues.
+
+Resolves the coupling between all clients each interval:
+
+* per-OST utilization from every channel's offered RPC rate and size
+  (fixed per-RPC cost + per-byte cost — many small RPCs burn server CPU);
+* proportional capacity scaling when an OST is oversubscribed;
+* queue-delay feedback (M/M/1-shaped, capped, EMA-smoothed) that clients
+  observe one interval later — the paper's "global system state reflected
+  in local metrics" (§I);
+* an overload knee: past ``ost_overload_knee`` concurrent RPCs the fixed
+  cost inflates, modeling server thrash under bursty high-concurrency
+  traffic (§II-A b). This is what makes *trimming* in-flight concurrency
+  under contention a winning move, as CARAT does in §IV-H.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.storage.client import ChannelDemand
+from repro.storage.params import PFSParams
+from repro.utils.rng import RngStream
+
+
+@dataclass
+class OSTState:
+    wait_s: float = 0.0           # smoothed queue delay clients observe
+    utilization: float = 0.0      # offered / capacity last interval
+    inflight: float = 0.0         # concurrent RPCs offered last interval
+    served_bytes: float = 0.0     # cumulative
+    served_rpcs: float = 0.0      # cumulative
+
+
+@dataclass
+class ClusterFeedback:
+    scale: Dict[int, float] = field(default_factory=dict)     # per-OST
+    waits: Dict[int, float] = field(default_factory=dict)     # per-OST
+
+
+class PFSCluster:
+    def __init__(self, params: PFSParams, rng: RngStream | None = None):
+        self.p = params
+        self.rng = rng or RngStream(0, "pfs")
+        self.osts: List[OSTState] = [OSTState() for _ in range(params.n_osts)]
+
+    def resolve(self, demands: List[ChannelDemand], dt: float) -> ClusterFeedback:
+        p = self.p
+        fb = ClusterFeedback()
+        # group demands per OST
+        by_ost: Dict[int, List[ChannelDemand]] = {}
+        for d in demands:
+            by_ost.setdefault(d.ost, []).append(d)
+
+        for ost_id, ost in enumerate(self.osts):
+            ds = by_ost.get(ost_id, [])
+            if not ds:
+                # idle: queue drains, wait decays
+                ost.wait_s *= 0.25
+                ost.utilization = 0.0
+                ost.inflight = 0.0
+                fb.scale[ost_id] = 1.0
+                fb.waits[ost_id] = ost.wait_s
+                continue
+
+            noise = float(self.rng.gen.lognormal(0.0, p.noise_sigma))
+
+            # overload knee: concurrency past the knee inflates fixed cost
+            inflight_offered = sum(d.window for d in ds)
+            over = max(0.0, inflight_offered / p.ost_overload_knee - 1.0)
+            fixed_eff = p.ost_fixed_cpu_s * (1.0 + p.ost_overload_gamma * over)
+
+            # SSD bandwidth needs queue depth: QD1 delivers a fraction of
+            # the device ceiling, deep pipelines approach it
+            qd = max(inflight_offered, 1.0)
+            disk_bw = (p.ost_disk_bw * qd / (qd + p.ssd_qd_half)) / noise
+
+            # utilization: sum over channels of rate x service time
+            util = 0.0
+            byte_rate = 0.0
+            for d in ds:
+                svc = fixed_eff + d.rpc_pages * 4096.0 / disk_bw
+                util += d.rpc_rate * svc
+                byte_rate += d.byte_rate
+            # network ceiling into the OSS counts too
+            util = max(util, byte_rate / p.ost_ingress_bw)
+
+            if util <= 0.95:
+                scale = 1.0
+            else:
+                scale = 0.95 / util   # proportional share under overload
+
+            # queue delay feedback (served load rho after scaling)
+            rho = min(util * scale, 0.95)
+            svc_avg = (sum(fixed_eff + d.rpc_pages * 4096.0 / disk_bw
+                           for d in ds) / len(ds))
+            wait_now = min(p.queue_wait_cap_s, svc_avg * rho / max(1 - rho, 0.05))
+            if util > 1.0:   # saturated: queue rides the cap
+                wait_now = p.queue_wait_cap_s
+            a = p.queue_smoothing
+            ost.wait_s = a * ost.wait_s + (1 - a) * wait_now
+            ost.utilization = util
+            ost.inflight = inflight_offered
+            ost.served_bytes += byte_rate * scale * dt
+            ost.served_rpcs += sum(d.rpc_rate for d in ds) * scale * dt
+
+            fb.scale[ost_id] = scale
+            fb.waits[ost_id] = ost.wait_s
+        return fb

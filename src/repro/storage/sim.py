@@ -1,0 +1,121 @@
+"""Simulation driver: clients + cluster + (optionally) CARAT controllers.
+
+Advances the modeled deployment in probe-interval steps. Controllers are
+attached per client (decentralized, exactly as the paper deploys CARAT) and
+are invoked after counters update, mirroring the probe -> snapshot -> tune
+loop of Fig 4. The driver itself never inspects global state on behalf of a
+controller — controllers only see their own client's counters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.storage.client import ClientConfig, IOClient
+from repro.storage.params import PFSParams
+from repro.storage.pfs import PFSCluster
+from repro.storage.workloads import WorkloadSpec
+from repro.utils.rng import RngStream
+
+# controller callback: (client, t, dt) -> None; may call set_rpc_config /
+# set_cache_limit on its own client only.
+Controller = Callable[[IOClient, float, float], None]
+
+
+@dataclass
+class SimResult:
+    duration_s: float
+    interval_s: float
+    # per-client per-interval application throughput (bytes/s), read+write
+    client_throughput: List[List[float]] = field(default_factory=list)
+    # per-client totals
+    app_read_bytes: List[float] = field(default_factory=list)
+    app_write_bytes: List[float] = field(default_factory=list)
+
+    @property
+    def aggregate_throughput(self) -> float:
+        total = sum(self.app_read_bytes) + sum(self.app_write_bytes)
+        return total / self.duration_s
+
+    def client_mean_throughput(self, i: int) -> float:
+        return (self.app_read_bytes[i] + self.app_write_bytes[i]) / self.duration_s
+
+
+class Simulation:
+    def __init__(
+        self,
+        workloads: Sequence[WorkloadSpec],
+        params: Optional[PFSParams] = None,
+        configs: Optional[Sequence[ClientConfig]] = None,
+        seed: int = 0,
+        interval_s: float = 0.5,
+        stripe_offsets: Optional[Sequence[int]] = None,
+    ):
+        self.p = params or PFSParams()
+        self.interval_s = interval_s
+        self.rng = RngStream(seed, "sim")
+        self.cluster = PFSCluster(self.p, self.rng.fork("cluster"))
+        self.clients: List[IOClient] = []
+        for i, wl in enumerate(workloads):
+            cfg = (ClientConfig(**vars(configs[i])) if configs is not None
+                   else ClientConfig())
+            offset = (stripe_offsets[i] if stripe_offsets is not None
+                      else (i * 3) % self.p.n_osts)
+            self.clients.append(IOClient(
+                client_id=i, params=self.p, workload=wl, config=cfg,
+                rng=self.rng.fork(f"client{i}"),
+                stripe_offset=offset,
+            ))
+        self.controllers: Dict[int, Controller] = {}
+        self.t = 0.0
+
+    def attach_controller(self, client_id: int, controller: Controller) -> None:
+        self.controllers[client_id] = controller
+
+    def step(self) -> None:
+        dt = self.interval_s
+        plans = [c.plan(self.t, dt, self.p.n_osts) for c in self.clients]
+        demands = [d for pl in plans for d in pl.all_demands()]
+        fb = self.cluster.resolve(demands, dt)
+        for client, plan in zip(self.clients, plans):
+            client.commit(plan, fb.scale, fb.waits, dt)
+        self.t += dt
+        # controllers run after counters update (probe -> tune, Fig 4)
+        for cid, ctrl in self.controllers.items():
+            ctrl(self.clients[cid], self.t, dt)
+
+    def run(self, duration_s: float) -> SimResult:
+        n_steps = int(round(duration_s / self.interval_s))
+        prev_totals = [(c.stats.read.app_bytes + c.stats.write.app_bytes)
+                       for c in self.clients]
+        start_read = [c.stats.read.app_bytes for c in self.clients]
+        start_write = [c.stats.write.app_bytes for c in self.clients]
+        series: List[List[float]] = [[] for _ in self.clients]
+        for _ in range(n_steps):
+            self.step()
+            for i, c in enumerate(self.clients):
+                total = c.stats.read.app_bytes + c.stats.write.app_bytes
+                series[i].append((total - prev_totals[i]) / self.interval_s)
+                prev_totals[i] = total
+        return SimResult(
+            duration_s=n_steps * self.interval_s,
+            interval_s=self.interval_s,
+            client_throughput=series,
+            app_read_bytes=[c.stats.read.app_bytes - s
+                            for c, s in zip(self.clients, start_read)],
+            app_write_bytes=[c.stats.write.app_bytes - s
+                             for c, s in zip(self.clients, start_write)],
+        )
+
+
+def run_static(
+    workload: WorkloadSpec,
+    config: ClientConfig,
+    duration_s: float = 20.0,
+    params: Optional[PFSParams] = None,
+    seed: int = 0,
+) -> float:
+    """Mean application throughput (bytes/s) of one client under one config."""
+    sim = Simulation([workload], params=params, configs=[config], seed=seed)
+    res = sim.run(duration_s)
+    return res.client_mean_throughput(0)

@@ -1,0 +1,7 @@
+from repro.train.optimizer import adamw_init, adamw_update, AdamWConfig
+from repro.train.schedule import warmup_cosine
+from repro.train.state import TrainState
+from repro.train.step import make_train_step, make_loss_fn
+
+__all__ = ["adamw_init", "adamw_update", "AdamWConfig", "warmup_cosine",
+           "TrainState", "make_train_step", "make_loss_fn"]

@@ -1,0 +1,38 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+
+def train_state_init(params, opt_cfg: AdamWConfig) -> Dict[str, Any]:
+    return {
+        "params": params,
+        "opt": adamw_init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+class TrainState:
+    """Thin helper over the state dict (kept as a plain pytree for pjit)."""
+
+    @staticmethod
+    def init(params, opt_cfg: AdamWConfig):
+        return train_state_init(params, opt_cfg)
+
+    @staticmethod
+    def pspecs(param_pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {
+            "params": param_pspecs,
+            "opt": {
+                "m": param_pspecs,
+                "v": param_pspecs,
+                "count": P(),
+            },
+            "step": P(),
+        }

@@ -1,0 +1,102 @@
+"""train_step / serve_step factories — the functions the dry-run lowers.
+
+``make_train_step`` returns a pure function
+    state, batch -> (state, metrics)
+with microbatched gradient accumulation (lax.scan over microbatches),
+remat policy applied inside the model, AdamW update, global-norm clipping
+and a warmup-cosine schedule. Distribution comes entirely from shardings
+on the jit boundary (pjit automatic partitioning); the optional int8
+pod-wise gradient compression swaps the cross-pod gradient all-reduce for
+a quantized exchange (see parallel/compression.py).
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points
+(decode = one new token against the KV cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import RunConfig
+from repro.models.lm import LanguageModel
+from repro.train.optimizer import AdamWConfig, adamw_update, global_norm
+from repro.train.schedule import warmup_cosine
+
+
+def make_loss_fn(model: LanguageModel, run: RunConfig) -> Callable:
+    remat = run.parallel.remat
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    return loss_fn
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(model: LanguageModel, run: RunConfig) -> Callable:
+    loss_fn = make_loss_fn(model, run)
+    opt_cfg = AdamWConfig(
+        b1=run.train.b1, b2=run.train.b2, eps=run.train.eps,
+        weight_decay=run.train.weight_decay,
+        state_dtype=jnp.dtype(run.parallel.opt_state_dtype))
+    n_micro = run.parallel.microbatches
+
+    def train_step(state: Dict[str, Any], batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+
+        if n_micro > 1:
+            micro = _split_microbatches(batch, n_micro)
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        lr = warmup_cosine(state["step"], run.train.learning_rate,
+                           run.train.warmup_steps, run.train.steps)
+        gnorm = global_norm(grads)
+        new_params, new_opt = adamw_update(
+            params, grads, state["opt"], lr, opt_cfg,
+            grad_clip=run.train.grad_clip)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LanguageModel, run: RunConfig) -> Callable:
+    def prefill_step(params, batch):
+        """Full-prompt forward; returns last-position logits (B, V)."""
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(model: LanguageModel, run: RunConfig) -> Callable:
+    def decode_step(params, tokens, cache, pos):
+        """One new token per sequence against the KV cache."""
+        logits, new_cache = model.decode_step(params, tokens, cache, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return decode_step

@@ -1,0 +1,6 @@
+"""Shared utilities: registries, logging, RNG streams, pytree helpers."""
+from repro.utils.registry import Registry
+from repro.utils.logging import get_logger
+from repro.utils.rng import RngStream
+
+__all__ = ["Registry", "get_logger", "RngStream"]

@@ -1,0 +1,114 @@
+"""Checkpointing + fault-tolerance runtime."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.config.types import CheckpointConfig
+from repro.runtime.fault_tolerance import (ClusterMonitor, StragglerDetector,
+                                           _largest_pow2_leq)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b": jnp.zeros((4,))},
+        "opt": {"m": {"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))},
+                "count": jnp.array(7, jnp.int32)},
+        "step": jnp.array(42, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d), n_shards=3)
+        state = _state()
+        mgr.save(state, step=42, blocking=True)
+        restored, step = mgr.restore(state)
+        assert step == 42
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d,
+                                                 async_write=True))
+        state = _state(1)
+        mgr.save(state, step=1)
+        mgr.wait()
+        restored, step = mgr.restore(state)
+        assert step == 1
+
+
+def test_corruption_detected():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d), n_shards=1)
+        mgr.save(_state(), step=5, blocking=True)
+        shard = os.path.join(d, "step_00000005", "shard_0.npz")
+        with open(shard, "r+b") as f:
+            f.seek(100)
+            f.write(b"\x00\x01\x02")
+        with pytest.raises(IOError):
+            mgr.restore(_state())
+
+
+def test_gc_keeps_latest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d, keep=2))
+        for s in (1, 2, 3, 4):
+            mgr.save(_state(), step=s, blocking=True)
+        assert mgr.latest_step() == 4
+        names = sorted(os.listdir(d))
+        assert "step_00000001" not in names
+        assert len([n for n in names if n.startswith("step_")]) == 2
+
+
+# ------------------------------------------------------------ fault tolerance
+def test_monitor_declares_death_and_plans_shrink():
+    # 8 hosts, TP groups of 2 => data axis of 4
+    groups = {h: h // 2 for h in range(8)}
+    mon = ClusterMonitor(8, groups, data_size=4, miss_limit=2)
+    alive = set(range(8)) - {5}
+    assert mon.tick(alive) is None         # first miss: not dead yet
+    plan = mon.tick(alive)                 # second miss: dead
+    assert plan is not None
+    assert 5 in plan.dead_hosts
+    # group 2 lost => 3 replicas survive => shrink to pow2 = 2
+    assert plan.new_data_size == 2
+
+
+def test_monitor_heartbeat_resets():
+    mon = ClusterMonitor(4, {h: h for h in range(4)}, data_size=4,
+                         miss_limit=2)
+    assert mon.tick({0, 1, 2}) is None
+    assert mon.tick({0, 1, 2, 3}) is None   # host 3 came back
+    assert mon.tick({0, 1, 2}) is None      # needs 2 consecutive again
+    assert not mon.dead
+
+
+def test_pow2():
+    assert _largest_pow2_leq(1) == 1
+    assert _largest_pow2_leq(7) == 4
+    assert _largest_pow2_leq(16) == 16
+
+
+def test_straggler_io_goes_to_carat_not_eviction():
+    det = StragglerDetector(4, threshold=1.5, patience=2)
+    for _ in range(5):
+        det.observe([1.0, 1.0, 1.0, 2.5], io_waits=[0, 0, 0, 1.4])
+    assert 3 in det.io_stragglers()
+    assert 3 not in det.to_evict()
+
+
+def test_straggler_compute_eviction():
+    det = StragglerDetector(4, threshold=1.5, patience=2)
+    for _ in range(5):
+        det.observe([1.0, 1.0, 1.0, 2.5], io_waits=[0, 0, 0, 0.0])
+    assert 3 in det.to_evict()

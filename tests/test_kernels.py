@@ -1,0 +1,154 @@
+"""Per-kernel correctness: shape/dtype sweeps + hypothesis vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ml.gbdt import train_gbdt
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import (flash_attention_ref,
+                                               flash_attention_xla_chunked)
+from repro.kernels.gbdt_infer.ops import PallasGBDTScorer, gbdt_predict_proba, pack_gbdt
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 4, 128, 32),      # MHA
+    (2, 8, 2, 256, 64),      # GQA 4:1
+    (1, 8, 1, 128, 64),      # MQA
+    (2, 4, 4, 192, 16),      # non-pow2 seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(b, hq, hkv, s, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (b, hq, s, d), dtype)
+    k = jax.random.normal(k2, (b, hkv, s, d), dtype)
+    v = jax.random.normal(k3, (b, hkv, s, d), dtype)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    pal = flash_attention(q, k, v, causal=True, backend="pallas",
+                          block_q=64, block_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32),
+                                           (False, 0)])
+def test_flash_attention_masks(causal, window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (1, 2, 128, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, 2, 128, 32), jnp.float32)
+    v = jax.random.normal(k3, (1, 2, 128, 32), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    pal = flash_attention(q, k, v, causal=causal, window=window,
+                          backend="pallas", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_xla_matches_exact():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (2, 4, 256, 32), jnp.float32)
+    k = jax.random.normal(k2, (2, 2, 256, 32), jnp.float32)
+    v = jax.random.normal(k3, (2, 2, 256, 32), jnp.float32)
+    for causal, window in [(True, 0), (True, 64), (False, 0)]:
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        chk = flash_attention_xla_chunked(q, k, v, causal=causal,
+                                          window=window, block_k=64)
+        np.testing.assert_allclose(np.asarray(chk), np.asarray(ref),
+                                   atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 256]),
+    hq=st.sampled_from([2, 4, 8]),
+    ratio=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_property(s, hq, ratio, seed):
+    hkv = hq // ratio
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (1, hq, s, 32), jnp.float32)
+    k = jax.random.normal(k2, (1, hkv, s, 32), jnp.float32)
+    v = jax.random.normal(k3, (1, hkv, s, 32), jnp.float32)
+    ref = flash_attention_ref(q, k, v)
+    pal = flash_attention(q, k, v, backend="pallas", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=3e-5)
+
+
+# ----------------------------------------------------------- decode attention
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (2, 4, 4, 512, 32),
+    (3, 8, 2, 1024, 64),
+    (1, 8, 1, 256, 64),
+])
+def test_decode_attention_shapes(b, hq, hkv, s, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(k1, (b, hq, d), jnp.float32)
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    lens = jnp.array([s - i * 7 for i in range(b)], jnp.int32)
+    ref = decode_attention(q, k, v, lengths=lens, backend="xla")
+    pal = decode_attention(q, k, v, lengths=lens, backend="pallas",
+                           block_k=128)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_respects_lengths():
+    """Tokens beyond `length` must not affect the output."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(k1, (1, 2, 16), jnp.float32)
+    k = jax.random.normal(k2, (1, 1, 64, 16), jnp.float32)
+    v = jax.random.normal(k3, (1, 1, 64, 16), jnp.float32)
+    lens = jnp.array([40], jnp.int32)
+    base = decode_attention(q, k, v, lengths=lens, backend="pallas",
+                            block_k=32)
+    k2b = k.at[:, :, 50:].set(99.0)
+    v2b = v.at[:, :, 50:].set(-99.0)
+    pert = decode_attention(q, k2b, v2b, lengths=lens, backend="pallas",
+                            block_k=32)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), atol=1e-6)
+
+
+# ------------------------------------------------------------------ gbdt infer
+@pytest.fixture(scope="module")
+def trained_gbdt():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(3000, 22)).astype(np.float32)
+    y = ((X[:, 0] * X[:, 3] + X[:, 7] > 0)).astype(np.int32)
+    return train_gbdt(X, y, n_trees=80, depth=5), X, y
+
+
+def test_gbdt_kernel_matches_numpy(trained_gbdt):
+    model, X, _ = trained_gbdt
+    packed = pack_gbdt(model)
+    ref = model.predict_proba(X[:300])
+    for backend in ("jnp", "pallas"):
+        got = gbdt_predict_proba(packed, X[:300], backend=backend)
+        np.testing.assert_allclose(got, ref, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200), seed=st.integers(0, 50))
+def test_gbdt_kernel_any_batch(trained_gbdt, n, seed):
+    model, _, _ = trained_gbdt
+    packed = pack_gbdt(model)
+    X = np.random.default_rng(seed).normal(size=(n, 22)).astype(np.float32)
+    ref = model.predict_proba(X)
+    got = gbdt_predict_proba(packed, X, backend="pallas")
+    np.testing.assert_allclose(got, ref, atol=2e-6)
+
+
+def test_gbdt_scorer_api(trained_gbdt):
+    model, X, _ = trained_gbdt
+    scorer = PallasGBDTScorer(model)
+    got = scorer.predict_proba(X[:63])
+    np.testing.assert_allclose(got, model.predict_proba(X[:63]), atol=2e-6)
+
+
+def test_gbdt_learns(trained_gbdt):
+    model, X, y = trained_gbdt
+    acc = (model.predict(X) == y).mean()
+    assert acc > 0.9

@@ -1,0 +1,113 @@
+"""Sharding rules, constraints, compression, HLO parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import get_arch, reduced_config
+from repro.config.types import ParallelConfig
+from repro.models.lm import build_model
+from repro.models.param import ParamSpec, logical_to_pspec
+from repro.parallel.compression import (dequantize_int8, error_feedback_update,
+                                        quantize_int8)
+from repro.parallel.constraints import constrain, set_activation_rules
+from repro.parallel.sharding import param_pspecs, param_rules
+from repro.roofline.hlo_parser import analyze_hlo
+
+
+def _pspec_leaves(tree):
+    return jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v3-671b",
+                                  "mamba2-370m", "recurrentgemma-2b",
+                                  "hubert-xlarge"])
+@pytest.mark.parametrize("fsdp", [True, False])
+def test_no_duplicate_mesh_axes(arch, fsdp):
+    """A PartitionSpec may not use the same mesh axis on two dims."""
+    cfg = get_arch(arch)
+    model = build_model(cfg)
+    specs = param_pspecs(model, ParallelConfig(fsdp=fsdp))
+    for spec in _pspec_leaves(specs):
+        flat = []
+        for part in spec:
+            if part is None:
+                continue
+            flat.extend(part if isinstance(part, tuple) else (part,))
+        assert len(flat) == len(set(flat)), f"{arch}: duplicate axes {spec}"
+
+
+def test_fsdp_shards_embed_dim():
+    cfg = get_arch("granite-3-2b")
+    model = build_model(cfg)
+    with_fsdp = param_pspecs(model, ParallelConfig(fsdp=True))
+    without = param_pspecs(model, ParallelConfig(fsdp=False))
+    n_data = sum("data" in str(s) for s in _pspec_leaves(with_fsdp))
+    n_data_off = sum("data" in str(s) for s in _pspec_leaves(without))
+    assert n_data > 0 and n_data_off == 0
+
+
+def test_constraints_are_noop_without_rules():
+    set_activation_rules(None)
+    x = jnp.ones((4, 4))
+    y = constrain(x, ("act_batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_int8_quantization_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    err = float(jnp.abs(back - x).max())
+    assert err <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_carries_residual():
+    g = {"w": jnp.array([0.30001, -0.29999, 1.0])}
+    r = {"w": jnp.zeros(3)}
+    sent, res = error_feedback_update(g, r)
+    # residual + sent reconstructs the input exactly
+    total = jax.tree_util.tree_map(lambda a, b: a + b, sent, res)
+    np.testing.assert_allclose(np.asarray(total["w"]), np.asarray(g["w"]),
+                               rtol=1e-6)
+
+
+def test_hlo_parser_counts_scan_trips():
+    def make(n):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=n)
+            return out
+        return f
+
+    shapes = (jax.ShapeDtypeStruct((128, 128), jnp.float32),) * 2
+    f2 = jax.jit(make(3)).lower(*shapes).compile()
+    f8 = jax.jit(make(12)).lower(*shapes).compile()
+    c3 = analyze_hlo(f2.as_text())
+    c12 = analyze_hlo(f8.as_text())
+    assert c3.flops == pytest.approx(3 * 2 * 128**3, rel=1e-6)
+    assert c12.flops == pytest.approx(12 * 2 * 128**3, rel=1e-6)
+
+
+def test_hlo_parser_collectives_synthetic():
+    hlo = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ag = f32[32,16]{1,0} all-gather(%p), replica_groups={}, dimensions={0}
+  %ar = f32[16,16]{1,0} all-reduce(%p), to_apply=%add
+  ROOT %r = f32[16,16]{1,0} copy(%ar)
+}
+"""
+    c = analyze_hlo(hlo)
+    assert c.collectives["all-gather"] == 32 * 16 * 4
+    assert c.collectives["all-reduce"] == 16 * 16 * 4
+
+
+def test_logical_to_pspec_unknown_axis_replicates():
+    spec = {"w": ParamSpec((4, 4), ("nonexistent", None))}
+    out = logical_to_pspec(spec, param_rules(ParallelConfig()))
+    assert out["w"] == P(None, None)

@@ -1,0 +1,103 @@
+"""PFS model: invariants (hypothesis) + mechanism directions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.storage import Simulation, get_workload
+from repro.storage.client import ClientConfig
+from repro.storage.sim import run_static
+from repro.storage.workloads import WORKLOADS, WorkloadSpec
+
+CONFIG_GRID = st.tuples(
+    st.sampled_from([16, 64, 256, 1024]),
+    st.sampled_from([1, 8, 64, 256]),
+    st.sampled_from([64, 512, 2048]),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfg=CONFIG_GRID, name=st.sampled_from(
+    ["s_wr_sq_1m", "s_wr_rn_8k", "s_rd_rn_8k", "f_rd_sq_1m"]))
+def test_throughput_positive_and_finite(cfg, name):
+    thr = run_static(get_workload(name), ClientConfig(*cfg), duration_s=8.0)
+    assert np.isfinite(thr)
+    assert thr > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg=CONFIG_GRID, seed=st.integers(0, 5))
+def test_dirty_cache_never_exceeds_limit(cfg, seed):
+    wl = get_workload("s_wr_rn_1m")
+    sim = Simulation([wl], configs=[ClientConfig(*cfg)], seed=seed)
+    cap = cfg[2] * 1024 * 1024
+    for _ in range(30):
+        sim.step()
+        assert sim.clients[0].dirty_bytes <= cap + 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg=CONFIG_GRID)
+def test_write_byte_conservation(cfg):
+    """admitted bytes == drained + absorbed + still-dirty (fluid ledger)."""
+    wl = get_workload("s_wr_sq_16m")
+    sim = Simulation([wl], configs=[ClientConfig(*cfg)], seed=0)
+    sim.run(10.0)
+    st_ = sim.clients[0].stats
+    lhs = st_.write.app_bytes
+    rhs = (st_.write.rpc_bytes + st_.write.absorbed_bytes
+           + sim.clients[0].dirty_bytes)
+    assert lhs == pytest.approx(rhs, rel=0.02)
+
+
+def test_determinism():
+    wl = get_workload("s_wr_rn_8k")
+    a = run_static(wl, ClientConfig(), duration_s=10.0, seed=3)
+    b = run_static(wl, ClientConfig(), duration_s=10.0, seed=3)
+    assert a == b
+
+
+def test_random_read_prefers_small_window():
+    """Paper §I: small random I/O benefits from smaller RPC windows."""
+    wl = get_workload("s_rd_rn_8k")
+    small = run_static(wl, ClientConfig(16, 8, 2048), duration_s=10.0)
+    large = run_static(wl, ClientConfig(1024, 8, 2048), duration_s=10.0)
+    assert small > 1.5 * large
+
+
+def test_seq_read_benefits_from_inflight():
+    """Table V mechanism: (64, 256) beats (1024, 8) for seq reads."""
+    wl = get_workload("s_rd_sq_8k")
+    deep = run_static(wl, ClientConfig(64, 256, 2048), duration_s=10.0)
+    shallow = run_static(wl, ClientConfig(1024, 1, 2048), duration_s=10.0)
+    assert deep > shallow
+
+
+def test_inplace_updates_absorbed_by_cache():
+    """Fig 6(d): 1m writes with in-place updates exceed drain throughput."""
+    wl = get_workload("s_wr_sq_1m")
+    assert wl.inplace_frac > 0
+    big_cache = run_static(wl, ClientConfig(1024, 64, 2048), duration_s=15.0)
+    tiny_cache = run_static(wl, ClientConfig(1024, 64, 64), duration_s=15.0)
+    assert big_cache > tiny_cache
+
+
+def test_interference_couples_clients():
+    """A heavy neighbor on the same OST lowers a victim's throughput."""
+    victim = get_workload("s_rd_sq_1m")
+    noise = get_workload("s_wr_sq_16m")
+    alone = Simulation([victim], seed=0, stripe_offsets=[0])
+    r_alone = alone.run(10.0).client_mean_throughput(0)
+    shared = Simulation([victim, noise], seed=0, stripe_offsets=[0, 0])
+    r_shared = shared.run(10.0).client_mean_throughput(0)
+    assert r_shared < 0.9 * r_alone
+
+
+def test_burst_duty_cycle_gates_activity():
+    wl = get_workload("dlio_bert")
+    assert wl.active(0.1)
+    assert not wl.active(wl.duty_cycle * wl.period_s + 0.05)
+
+
+def test_workload_registry_complete():
+    # 24 filebench + 2 dlio + 2 h5bench
+    assert len(list(WORKLOADS)) >= 28

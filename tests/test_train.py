@@ -1,0 +1,92 @@
+"""Optimizer / schedule / microbatching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch, reduced_config
+from repro.config.types import ParallelConfig, RunConfig, ShapeConfig
+from repro.models.lm import build_model
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.train.schedule import warmup_cosine
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    target = jnp.array([1.0, 2.0])
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = adamw_update(params, g, state, lr=0.05, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clip_caps_update_norm():
+    cfg = AdamWConfig(weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, _ = adamw_update(params, g, state, lr=0.1, cfg=cfg, grad_clip=1.0)
+    assert float(jnp.abs(p2["w"]).max()) < 1.0
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.array(s), 1e-3, 10, 100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[99] < lrs[10]
+    assert lrs[99] >= 1e-4 * 0.99      # min_frac floor
+
+
+def test_microbatching_matches_full_batch():
+    cfg = reduced_config(get_arch("granite-3-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                          cfg.vocab_size)}
+    shape = ShapeConfig("t", 16, 4, "train")
+
+    def run_with(n_micro):
+        run = RunConfig(arch=cfg, shape=shape,
+                        parallel=ParallelConfig(microbatches=n_micro,
+                                                remat="none"))
+        state = TrainState.init(params, AdamWConfig())
+        step = jax.jit(make_train_step(model, run))
+        new_state, m = step(state, batch)
+        return m["loss"], new_state["params"]
+
+    l1, p1 = run_with(1)
+    l2, p2 = run_with(2)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_loss_decreases_over_steps():
+    cfg = reduced_config(get_arch("h2o-danube-1.8b"))
+    model = build_model(cfg)
+    run = RunConfig(arch=cfg, shape=ShapeConfig("t", 16, 4, "train"),
+                    parallel=ParallelConfig(remat="dots"))
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = TrainState.init(params, AdamWConfig())
+    step = jax.jit(make_train_step(model, run))
+    batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+             "labels": jnp.zeros((4, 16), jnp.int32)}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

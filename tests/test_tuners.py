@@ -1,0 +1,125 @@
+"""Algorithm 1 (RPC tuner) and Algorithm 2 (cache tuner) semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_tuner import CacheDemand, cache_allocation
+from repro.core.policy import CaratSpaces, default_spaces
+from repro.core.rpc_tuner import (ConditionalScoreGreedy, EpsilonGreedyTuner,
+                                  GreedyTuner, make_tuner)
+from repro.utils.rng import RngStream
+
+SPACES = default_spaces()
+FEAT = np.zeros(20, dtype=np.float32)
+
+
+def _tuner(cls_kind, probs_by_candidate, **kw):
+    """Build a tuner whose model returns fixed per-candidate probs."""
+    probs = np.asarray(probs_by_candidate, dtype=np.float64)
+
+    def model(X):
+        return probs
+
+    return make_tuner(cls_kind, SPACES, {"read": model, "write": model},
+                      rng=RngStream(0, "t"), **kw)
+
+
+def test_greedy_picks_argmax():
+    n = len(SPACES.rpc_candidates())
+    probs = np.zeros(n)
+    probs[5] = 0.9
+    t = _tuner("greedy", probs)
+    assert t.propose("read", FEAT) == SPACES.rpc_candidates()[5]
+
+
+def test_conditional_score_returns_none_below_tau():
+    """Stability gate: no candidate above tau => retain current config."""
+    n = len(SPACES.rpc_candidates())
+    t = _tuner("conditional_score", np.full(n, 0.5), tau=0.8)
+    assert t.propose("read", FEAT) is None
+
+
+def test_conditional_score_prefers_progressive_write():
+    """WriteScore biases toward larger theta among all-confident options."""
+    n = len(SPACES.rpc_candidates())
+    t = _tuner("conditional_score", np.full(n, 0.95), tau=0.8,
+               alpha=0.5, beta=0.5)
+    w, f = t.propose("write", FEAT)
+    assert w == max(SPACES.rpc_window_pages)
+    assert f == max(SPACES.rpcs_in_flight)
+
+
+def test_conditional_score_read_formula():
+    """ReadScore = f*(1+alpha*t1) + t2 — hand-check a 2-candidate case."""
+    cands = SPACES.rpc_candidates()
+    probs = np.zeros(len(cands))
+    # candidate A: small window, max flight, p=0.85
+    ia = cands.index((16, 256))
+    # candidate B: max window, min flight, p=0.99
+    ib = cands.index((1024, 1))
+    probs[ia], probs[ib] = 0.85, 0.99
+    t = _tuner("conditional_score", probs, tau=0.8, alpha=0.5, beta=0.5)
+    # normalized over S={A,B}: A=(0,1), B=(1,0)
+    score_a = 0.85 * (1 + 0.5 * 0.0) + 1.0     # = 1.85
+    score_b = 0.99 * (1 + 0.5 * 1.0) + 0.0     # = 1.485
+    assert score_a > score_b
+    assert t.propose("read", FEAT) == (16, 256)
+
+
+def test_epsilon_greedy_explores():
+    n = len(SPACES.rpc_candidates())
+    probs = np.zeros(n)
+    probs[0] = 1.0
+    t = _tuner("epsilon_greedy", probs, epsilon=0.5)
+    picks = {t.propose("read", FEAT) for _ in range(50)}
+    assert len(picks) > 1          # exploration happened
+    assert SPACES.rpc_candidates()[0] in picks
+
+
+# ------------------------------------------------------------- Algorithm 2
+def test_cache_idle_clients_get_min():
+    d = [CacheDemand(0, False, 0, 0, 0.0),
+         CacheDemand(1, True, 100 * 2**20, 0, 1.0)]
+    out = cache_allocation(d, SPACES, node_budget_mb=4096)
+    assert out[0] == SPACES.cache_min
+
+
+def test_cache_all_active_get_max_when_budget_allows():
+    d = [CacheDemand(i, True, 10 * 2**20, 0, 0.5) for i in range(2)]
+    out = cache_allocation(d, SPACES, node_budget_mb=10 * SPACES.cache_max)
+    assert all(v == SPACES.cache_max for v in out.values())
+
+
+def test_cache_constrained_uses_three_factors_snapped_up():
+    d = [
+        CacheDemand(0, True, peak_cache_bytes=300 * 2**20,
+                    peak_inflight_bytes=0, write_rpc_share=0.0),
+        CacheDemand(1, True, peak_cache_bytes=0,
+                    peak_inflight_bytes=700 * 2**20, write_rpc_share=0.0),
+    ]
+    out = cache_allocation(d, SPACES, node_budget_mb=1024)
+    assert out[0] == SPACES.snap_cache_up(300)      # 512
+    assert out[1] == SPACES.snap_cache_up(700)      # 1024
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.floats(0, 4e9),
+                          st.floats(0, 4e9), st.floats(0, 1)),
+                min_size=1, max_size=6))
+def test_cache_allocation_always_on_grid(rows):
+    demands = [CacheDemand(i, a, pc, pi, w)
+               for i, (a, pc, pi, w) in enumerate(rows)]
+    out = cache_allocation(demands, SPACES, node_budget_mb=4096)
+    for cid, mb in out.items():
+        assert mb in SPACES.dirty_cache_mb
+
+
+def test_snap_cache_up():
+    assert SPACES.snap_cache_up(0) == SPACES.cache_min
+    assert SPACES.snap_cache_up(65) == 128
+    assert SPACES.snap_cache_up(10**9) == SPACES.cache_max
+
+
+def test_spaces_validation():
+    with pytest.raises(ValueError):
+        CaratSpaces((64, 16), (1,), (64,))      # unsorted grid
