@@ -1,0 +1,129 @@
+"""Fleet-scale sweep: per-client controller loop vs batched fleet engine.
+
+For each fleet size n the same simulation (same workload mix, same seed,
+same controller shells) runs twice: once with n independent per-client
+``CaratController`` callbacks, once with one ``FleetController`` batching
+every probe's stage-1 tuning into a single vectorized inference call.
+
+Reported per size:
+
+* per-decision tuner cost of both paths (us) and the speedup;
+* whether the fleet's decisions are **bit-identical** to the per-client
+  path on the full trace (they must be — the batched path is a compute
+  reshape, not an approximation).
+
+Emitted rows (benchmarks/common.py CSV convention):
+    fleet_scale_percl_n{n},us_per_decision,decisions
+    fleet_scale_fleet_n{n},us_per_decision,speedup|identical
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_fleet_scale.py [--smoke]
+
+``--smoke`` bounds the sweep for CI (<= 64 clients, shorter sim).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "benchmarks")
+
+from common import carat_models, emit  # noqa: E402
+
+from repro.config.types import CaratConfig  # noqa: E402
+from repro.core import (CaratController, FleetController,  # noqa: E402
+                        NodeCacheArbiter, default_spaces)
+from repro.core.ml.train import get_default_models  # noqa: E402
+from repro.storage import Simulation, get_workload  # noqa: E402
+
+WL_CYCLE = ("s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_1m", "s_wr_rn_8k")
+
+
+def _workloads(n):
+    return [get_workload(WL_CYCLE[i % len(WL_CYCLE)]) for i in range(n)]
+
+
+def _controllers(n, spaces, models, cfg):
+    return [CaratController(i, spaces, models, cfg,
+                            arbiter=NodeCacheArbiter(spaces))
+            for i in range(n)]
+
+
+def run_pair(n, duration_s, seed=0, tuner="conditional_score",
+             backend="auto"):
+    """Run per-client and fleet variants of the same deployment."""
+    spaces = default_spaces()
+    cfg = CaratConfig(tuner=tuner)
+    m_r, m_w = get_default_models()
+    gbdts = {"read": m_r, "write": m_w}
+
+    sim_a = Simulation(_workloads(n), seed=seed)
+    percl = _controllers(n, spaces, carat_models(), cfg)
+    for i, c in enumerate(percl):
+        sim_a.attach_controller(i, c)
+    sim_a.run(duration_s)
+    n_dec = sum(c.tuner.tune_count for c in percl)
+    us_percl = (sum(c.tuner.tune_time_total for c in percl)
+                / max(n_dec, 1)) * 1e6
+
+    sim_b = Simulation(_workloads(n), seed=seed)
+    shells = _controllers(n, spaces, carat_models(), cfg)
+    fleet = FleetController(shells, gbdts, backend=backend, cfg=cfg)
+    sim_b.attach_fleet(fleet)
+    sim_b.run(duration_s)
+    us_fleet = fleet.mean_decision_s * 1e6
+
+    identical = all(a.decisions == b.decisions
+                    for a, b in zip(percl, shells))
+    identical &= all(ca.config.dirty_cache_mb == cb.config.dirty_cache_mb
+                     for ca, cb in zip(sim_a.clients, sim_b.clients))
+    return us_percl, us_fleet, n_dec, identical
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="bounded sweep for CI (<= 64 clients)")
+    ap.add_argument("--tuner", default="conditional_score")
+    # "numpy" is the bit-exact scoring path the identity gate relies on
+    # (and what "auto" resolves to on CPU hosts); pass "auto" on a TPU host
+    # to time the kernel path, where the gate downgrades to a warning
+    # because jnp/pallas only match to float32 tolerance.
+    ap.add_argument("--backend", default="numpy")
+    args = ap.parse_args(argv)
+
+    sizes = (1, 4, 16, 64) if args.smoke else (1, 4, 16, 64, 256)
+    duration = 8.0 if args.smoke else 12.0
+
+    failures = []
+    speedup_at_64 = None
+    for n in sizes:
+        us_percl, us_fleet, n_dec, identical = run_pair(
+            n, duration, tuner=args.tuner, backend=args.backend)
+        speedup = us_percl / max(us_fleet, 1e-9)
+        emit(f"fleet_scale_percl_n{n}", us_percl, n_dec)
+        emit(f"fleet_scale_fleet_n{n}", us_fleet,
+             f"{speedup:.1f}x|identical={identical}")
+        if n == 64:
+            speedup_at_64 = speedup
+        if not identical:
+            msg = (f"n={n}: fleet decisions diverged "
+                   f"from the per-client path")
+            if args.backend == "numpy":
+                failures.append(msg)
+            else:
+                print(f"WARN: {msg} (backend={args.backend} is not "
+                      f"bit-exact; rerun with --backend numpy to gate)",
+                      file=sys.stderr)
+
+    if speedup_at_64 is not None and speedup_at_64 < 5.0:
+        failures.append(f"per-decision speedup at 64 clients is "
+                        f"{speedup_at_64:.1f}x (< 5x target)")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,10 +15,12 @@ from repro.core.rpc_tuner import (
 )
 from repro.core.cache_tuner import cache_allocation
 from repro.core.controller import CaratController, NodeCacheArbiter
+from repro.core.fleet import FleetController, attach_fleet_to, build_fleet_tuner
 
 __all__ = [
     "CaratSpaces", "default_spaces", "Metrics", "compute_metrics",
     "FEATURE_NAMES", "SnapshotBuilder", "Snapshot",
     "ConditionalScoreGreedy", "GreedyTuner", "EpsilonGreedyTuner",
     "make_tuner", "cache_allocation", "CaratController", "NodeCacheArbiter",
+    "FleetController", "attach_fleet_to", "build_fleet_tuner",
 ]

@@ -42,9 +42,18 @@ def cache_allocation(
     idle = [d for d in demands if not d.active]
     for d in idle:                                   # line 2
         out[d.client_id] = spaces.cache_min
-    remaining = node_budget_mb - spaces.cache_min * len(idle)
+    # Idle minimums can exceed a tight node budget; a negative remainder
+    # would flow into the factor-(3) demands below, so clamp at zero.
+    remaining = max(node_budget_mb - spaces.cache_min * len(idle), 0.0)
 
     if not active:
+        return out
+
+    if remaining <= 0.0:
+        # budget exhausted by idle minimums: active clients degrade to the
+        # grid floor instead of receiving nonsense negative demands
+        for d in active:
+            out[d.client_id] = spaces.cache_min
         return out
 
     if spaces.cache_max * len(active) <= remaining:  # line 5

@@ -83,7 +83,11 @@ class NodeCacheArbiter:
         for m in self.members:
             if m.client is not None and m.client_id in alloc:
                 m.client.set_cache_limit(alloc[m.client_id])
-            m.stage_factors = _StageFactors()
+            # Only clients at an inactive->active boundary have finished the
+            # stage their factors describe; clients still mid-active-stage
+            # keep accumulating toward their own next boundary.
+            if m.was_inactive_long:
+                m.stage_factors = _StageFactors()
         return alloc
 
 
@@ -125,11 +129,19 @@ class CaratController:
         self.decisions: List[tuple] = []
 
     # --- Simulation controller interface ---------------------------------------
-    def __call__(self, client: IOClient, t: float, dt: float) -> None:
+    def observe(self, client: IOClient, t: float,
+                dt: float) -> Optional[tuple]:
+        """Snapshot + stage bookkeeping, *without* deciding.
+
+        Runs everything up to (and including) the stage-2 boundary check,
+        and returns ``(op, feats)`` when a stage-1 RPC decision is due —
+        the hook a fleet controller uses to gather one batch across many
+        clients. Returns None when no decision is needed this probe.
+        """
         self.client = client
         snap = self.builder.sample(client.stats, t)
         if snap is None:
-            return
+            return None
         self.stage_factors.update(snap)
 
         if not snap.active:
@@ -137,7 +149,7 @@ class CaratController:
             self.inactive_s += dt
             if self.inactive_s >= self.cfg.inactive_threshold_s:
                 self.was_inactive_long = True
-            return
+            return None
 
         # I/O resumed after a long-enough inactive stage: stage-2 boundary
         if self.was_inactive_long and self.arbiter is not None:
@@ -149,14 +161,31 @@ class CaratController:
         op = snap.dominant_op
         feats = self.builder.feature_vector(op)
         if feats is None:
+            return None
+        return op, feats
+
+    def actuate(self, op: str, proposal: Optional[tuple], t: float,
+                tune_time_s: float = 0.0) -> None:
+        """Apply a stage-1 decision produced for this controller's client.
+
+        ``tune_time_s`` is the (share of) tuner time spent producing the
+        proposal, folded into the Table VIII end-to-end accounting.
+        """
+        t0 = time.perf_counter()
+        if proposal is not None:
+            self.client.set_rpc_config(*proposal)
+            self.decisions.append((t, op) + tuple(proposal))
+        self.apply_time_total += tune_time_s + time.perf_counter() - t0
+        self.apply_count += 1
+
+    def __call__(self, client: IOClient, t: float, dt: float) -> None:
+        pending = self.observe(client, t, dt)
+        if pending is None:
             return
+        op, feats = pending
         t0 = time.perf_counter()
         proposal = self.tuner.propose(op, feats)
-        if proposal is not None:
-            client.set_rpc_config(*proposal)
-            self.decisions.append((t, op) + proposal)
-        self.apply_time_total += time.perf_counter() - t0
-        self.apply_count += 1
+        self.actuate(op, proposal, t, time.perf_counter() - t0)
 
     # --- Table VIII ----------------------------------------------------------
     def overheads(self) -> Dict[str, float]:

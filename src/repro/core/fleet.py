@@ -1,0 +1,181 @@
+"""Fleet tuning engine: batched Stage-1 RPC tuning across many clients.
+
+The paper deploys one CARAT controller per client; this module keeps that
+*decision semantics* while collapsing the per-probe compute. Each probe
+interval the fleet controller:
+
+1. runs every member controller's ``observe`` (snapshot, stage machine,
+   stage-2 boundary handling) in client order — exactly the order the
+   per-client loop uses;
+2. gathers the pending ``(op, feature_vector)`` pairs into one batch and
+   scores the whole fleet's candidate space in a single vectorized
+   inference call (``_TunerBase.propose_many``, fed by the
+   ``GridGBDTScorer`` fast path in ``kernels/gbdt_infer``);
+3. applies each client's selected configuration via ``actuate``.
+
+Decisions are bit-identical to attaching the same controllers
+individually: inference is batch-invariant, Algorithm 1's tau-filter +
+conditional score is applied as a vectorized masked argmax with the same
+elementwise arithmetic, and exploration draws stay on each client's own
+RNG stream. ``benchmarks/bench_fleet_scale.py`` verifies this on full
+simulation traces while measuring the per-decision cost drop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.config.types import CaratConfig
+from repro.core.controller import CaratController, NodeCacheArbiter
+from repro.core.ml.gbdt import ObliviousGBDT
+from repro.core.policy import CaratSpaces
+from repro.core.rpc_tuner import _TunerBase, make_tuner
+from repro.storage.client import IOClient
+from repro.utils.rng import RngStream
+
+
+def _as_prob_fn(model) -> object:
+    return model.predict_proba if hasattr(model, "predict_proba") else model
+
+
+def build_fleet_tuner(
+    cfg: CaratConfig,
+    spaces: CaratSpaces,
+    models: Dict[str, object],
+    backend: str = "auto",
+    rng: Optional[RngStream] = None,
+) -> _TunerBase:
+    """One shared batched tuner for a whole fleet.
+
+    ``models`` maps op -> either an :class:`ObliviousGBDT` (gets the
+    factorized grid fast path, backend-selected by batch size) or any
+    ``predict_proba``-style callable (scored via the generic cross-product
+    fallback — still one call per op direction).
+    """
+    # deferred: kernels/gbdt_infer imports repro.core.ml.gbdt, which would
+    # re-enter this package's __init__ while it is still initializing
+    from repro.kernels.gbdt_infer.ops import GridGBDTScorer
+
+    theta = spaces.theta_features()
+    grid: Dict[str, GridGBDTScorer] = {}
+    probs: Dict[str, object] = {}
+    for op, m in models.items():
+        probs[op] = _as_prob_fn(m)
+        if isinstance(m, ObliviousGBDT):
+            grid[op] = GridGBDTScorer(m, theta, backend=backend)
+    return make_tuner(cfg.tuner, spaces, probs, tau=cfg.prob_tau,
+                      alpha=cfg.alpha, beta=cfg.beta, epsilon=cfg.epsilon,
+                      rng=rng or RngStream(0, "fleet"), grid_models=grid)
+
+
+class FleetController:
+    """Drives many :class:`CaratController` shells with one batched tuner.
+
+    Attach to a :class:`~repro.storage.sim.Simulation` via
+    ``sim.attach_fleet(fleet)``; the simulation invokes it once per step
+    with all clients, instead of once per client.
+    """
+
+    def __init__(
+        self,
+        controllers: Sequence[CaratController],
+        models: Dict[str, object],
+        backend: str = "auto",
+        cfg: Optional[CaratConfig] = None,
+    ):
+        if not controllers:
+            raise ValueError("fleet needs at least one controller")
+        self.controllers = list(controllers)
+        self.cfg = cfg or self.controllers[0].cfg
+        self.spaces = self.controllers[0].spaces
+        # One tuner serves every shell, so heterogeneous per-shell settings
+        # would be silently overridden — reject them up front.
+        for c in self.controllers:
+            if c.cfg != self.cfg or c.spaces != self.spaces:
+                raise ValueError(
+                    f"client {c.client_id}: fleet members must share one "
+                    f"CaratConfig and CaratSpaces (fleet uses a single "
+                    f"batched tuner); run heterogeneous clients per-client "
+                    f"or in separate fleets")
+        self.tuner = build_fleet_tuner(self.cfg, self.spaces, models,
+                                       backend=backend)
+        # fleet-level accounting
+        self.batch_time_total = 0.0
+        self.batch_count = 0
+        self.decision_count = 0
+
+    # ------------------------------------------------------------- sim hook
+    def __call__(self, clients: Sequence[IOClient], t: float,
+                 dt: float) -> None:
+        pending: List[tuple] = []
+        for ctrl in self.controllers:
+            req = ctrl.observe(clients[ctrl.client_id], t, dt)
+            if req is not None:
+                pending.append((ctrl, req[0], req[1]))
+        if not pending:
+            return
+        ops = [op for _, op, _ in pending]
+        feats = np.stack([f for _, _, f in pending])
+        rngs = [c.tuner.rng for c, _, _ in pending]
+        t0 = time.perf_counter()
+        proposals = self.tuner.propose_many(ops, feats, rngs=rngs)
+        elapsed = time.perf_counter() - t0
+        self.batch_time_total += elapsed
+        self.batch_count += 1
+        self.decision_count += len(pending)
+        share = elapsed / len(pending)
+        for (ctrl, op, _), proposal in zip(pending, proposals):
+            ctrl.actuate(op, proposal, t, share)
+
+    # ----------------------------------------------------------- accounting
+    @property
+    def mean_decision_s(self) -> float:
+        """Mean tuner cost per client decision (the fleet-scale metric)."""
+        return self.batch_time_total / max(self.decision_count, 1)
+
+    @property
+    def decisions(self) -> List[List[tuple]]:
+        return [c.decisions for c in self.controllers]
+
+    def overheads(self) -> Dict[str, float]:
+        snap_ms = float(np.mean([c.builder.mean_snapshot_time_s
+                                 for c in self.controllers])) * 1e3
+        return {
+            "snapshot_ms": snap_ms,
+            "inference_ms": self.tuner.mean_inference_s * 1e3,
+            "decision_ms": self.mean_decision_s * 1e3,
+            "batch_ms": (self.batch_time_total
+                         / max(self.batch_count, 1)) * 1e3,
+        }
+
+
+def attach_fleet_to(
+    sim,
+    spaces: CaratSpaces,
+    models: Dict[str, object],
+    cfg: Optional[CaratConfig] = None,
+    shared_node_arbiter: bool = False,
+    node_budget_mb: Optional[float] = None,
+    backend: str = "auto",
+) -> FleetController:
+    """Build per-client controller shells for every client in ``sim``,
+    wire stage-2 arbiters (one per node when ``shared_node_arbiter``, else
+    private per client — mirroring ``benchmarks.common.run_scenario``),
+    and attach a fleet controller driving them all."""
+    cfg = cfg or CaratConfig()
+    if node_budget_mb is not None and not shared_node_arbiter:
+        # per-client arbiters would each get the full budget, silently
+        # multiplying the intended node cap by the client count
+        raise ValueError("node_budget_mb requires shared_node_arbiter=True")
+    shared = (NodeCacheArbiter(spaces, node_budget_mb)
+              if shared_node_arbiter else None)
+    ctrls = []
+    for c in sim.clients:
+        arb = shared if shared is not None else NodeCacheArbiter(spaces)
+        ctrls.append(CaratController(c.client_id, spaces, models, cfg,
+                                     arbiter=arb))
+    fleet = FleetController(ctrls, models, backend=backend, cfg=cfg)
+    sim.attach_fleet(fleet)
+    return fleet

@@ -49,7 +49,12 @@ class ObliviousGBDT:
         bits = (gathered > self.thr[None, :, :]).astype(np.int64)
         weights = (1 << np.arange(self.depth - 1, -1, -1)).astype(np.int64)
         idx = (bits * weights).sum(axis=2)                      # (n, T)
-        contrib = self.leaf[np.arange(self.n_trees)[None, :], idx]
+        # Flat C-contiguous gather, then a row-local pairwise sum over trees.
+        # This accumulation order is the contract the batched fleet scorer
+        # (kernels/gbdt_infer GridGBDTScorer) reproduces bit-for-bit; keep
+        # the two in sync if either changes.
+        flat = idx + (np.arange(self.n_trees, dtype=np.int64) << self.depth)
+        contrib = self.leaf.ravel().take(flat)
         return self.base + contrib.sum(axis=1)
 
     def predict_proba(self, X: np.ndarray) -> np.ndarray:

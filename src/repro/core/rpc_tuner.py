@@ -15,11 +15,21 @@ Three strategies, in the order the paper developed them:
 
 A tuner proposes ``(window_pages, in_flight)`` or None (retain current —
 the stability gate of §III-F when no candidate clears tau).
+
+Two entry points share each strategy's selection rule:
+
+* ``propose(op, feats)`` — the scalar per-client path;
+* ``propose_many(ops, feats, rngs)`` — the fleet path: one vectorized
+  inference call over every pending client (grouped by op direction) and
+  a vectorized per-client selection. Decisions are bit-identical to
+  calling ``propose`` per client, provided the model scores rows
+  batch-invariantly (true of the GBDT paths; exploration draws are taken
+  from each client's own RngStream in client order).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +38,8 @@ from repro.utils.rng import RngStream
 
 # A scorer maps a batch of rows (n_candidates, n_features) -> probabilities.
 ProbFn = Callable[[np.ndarray], np.ndarray]
+# A grid scorer maps (n_clients, n_features) -> (n_clients, n_candidates).
+GridProbFn = Callable[[np.ndarray], np.ndarray]
 
 
 class _TunerBase:
@@ -39,6 +51,7 @@ class _TunerBase:
         alpha: float = 0.5,
         beta: float = 0.5,
         rng: Optional[RngStream] = None,
+        grid_models: Optional[Dict[str, GridProbFn]] = None,
     ):
         self.spaces = spaces
         self.models = models
@@ -46,6 +59,7 @@ class _TunerBase:
         self.alpha = alpha
         self.beta = beta
         self.rng = rng or RngStream(0, "tuner")
+        self.grid_models = grid_models or {}
         self._cands = spaces.rpc_candidates()
         self._theta = spaces.theta_features()          # (n, 2) log2 scale
         # Table VIII accounting
@@ -63,8 +77,33 @@ class _TunerBase:
         self.inference_time_total += time.perf_counter() - t0
         return probs
 
-    def _select(self, op: str, probs: np.ndarray) -> Optional[int]:
+    def _probs_many(self, op: str, feats: np.ndarray) -> np.ndarray:
+        """(k, n_features) client rows -> (k, n_candidates) probabilities."""
+        k = feats.shape[0]
+        grid = self.grid_models.get(op)
+        if grid is not None:
+            return np.asarray(grid(feats), dtype=np.float64).reshape(k, -1)
+        c = len(self._cands)
+        X = np.concatenate([np.repeat(feats, c, axis=0),
+                            np.tile(self._theta, (k, 1))],
+                           axis=1).astype(np.float32)
+        return np.asarray(self.models[op](X), dtype=np.float64).reshape(k, c)
+
+    def _select(self, op: str, probs: np.ndarray,
+                rng: Optional[RngStream] = None) -> Optional[int]:
         raise NotImplementedError
+
+    def _select_many(self, ops: Sequence[str], probs: np.ndarray,
+                     rngs: Optional[Sequence[RngStream]] = None) -> np.ndarray:
+        """Default batched selection: per-row ``_select`` (strategies with a
+        closed-form vectorization override this). Returns (k,) candidate
+        indices with -1 encoding "retain current config"."""
+        out = np.empty(len(ops), dtype=np.int64)
+        for i, op in enumerate(ops):
+            k = self._select(op, probs[i],
+                             rng=rngs[i] if rngs is not None else None)
+            out[i] = -1 if k is None else k
+        return out
 
     # ------------------------------------------------------------------ API
     def propose(self, op: str, feats: np.ndarray) -> Optional[Tuple[int, int]]:
@@ -76,6 +115,39 @@ class _TunerBase:
         if k is None:
             return None
         return self._cands[k]
+
+    def propose_many(
+        self,
+        ops: Sequence[str],
+        feats: np.ndarray,
+        rngs: Optional[Sequence[RngStream]] = None,
+    ) -> List[Optional[Tuple[int, int]]]:
+        """Batched Stage-1 tuning for many clients in one call.
+
+        ``ops[i]`` is client i's dominant op direction, ``feats[i]`` its
+        feature vector; ``rngs[i]`` (optional) is the client's own stream so
+        exploration draws land exactly where the scalar path would put them.
+        Returns one proposal (or None) per client.
+        """
+        n = len(ops)
+        feats = np.asarray(feats, dtype=np.float32)
+        if feats.shape[0] != n:
+            raise ValueError(f"{n} ops but {feats.shape[0]} feature rows")
+        t0 = time.perf_counter()
+        probs = np.empty((n, len(self._cands)), dtype=np.float64)
+        t_inf = 0.0
+        for op in dict.fromkeys(ops):      # unique, first-appearance order
+            if op not in self.models and op not in self.grid_models:
+                raise KeyError(op)         # mirror the scalar path
+            rows = [i for i, o in enumerate(ops) if o == op]
+            t1 = time.perf_counter()
+            probs[rows] = self._probs_many(op, feats[rows])
+            t_inf += time.perf_counter() - t1
+        self.inference_time_total += t_inf
+        chosen = self._select_many(ops, probs, rngs)
+        self.tune_time_total += time.perf_counter() - t0
+        self.tune_count += n
+        return [self._cands[int(k)] if k >= 0 else None for k in chosen]
 
     @property
     def mean_inference_s(self) -> float:
@@ -89,27 +161,37 @@ class _TunerBase:
 class GreedyTuner(_TunerBase):
     """Pure greedy: argmax probability (paper's first attempt)."""
 
-    def _select(self, op, probs):
+    def _select(self, op, probs, rng=None):
         return int(np.argmax(probs))
+
+    def _select_many(self, ops, probs, rngs=None):
+        return np.argmax(probs, axis=1)
 
 
 class EpsilonGreedyTuner(_TunerBase):
-    """Greedy with epsilon-random exploration (paper's second attempt)."""
+    """Greedy with epsilon-random exploration (paper's second attempt).
+
+    The batched path keeps the base per-row selection loop: each client's
+    exploration draw must come from that client's own stream, in the same
+    order as the scalar path, to stay bit-identical. Inference — the actual
+    cost — is still one batched call.
+    """
 
     def __init__(self, *args, epsilon: float = 0.1, **kw):
         super().__init__(*args, **kw)
         self.epsilon = epsilon
 
-    def _select(self, op, probs):
-        if float(self.rng.uniform()) < self.epsilon:
-            return int(self.rng.integers(0, len(probs)))
+    def _select(self, op, probs, rng=None):
+        rng = rng if rng is not None else self.rng
+        if float(rng.uniform()) < self.epsilon:
+            return int(rng.integers(0, len(probs)))
         return int(np.argmax(probs))
 
 
 class ConditionalScoreGreedy(_TunerBase):
     """Algorithm 1: tau-filter + normalized progressive score."""
 
-    def _select(self, op, probs):
+    def _select(self, op, probs, rng=None):
         keep = np.where(probs > self.tau)[0]            # line 1
         if keep.size == 0:
             return None                                 # retain current config
@@ -123,6 +205,27 @@ class ConditionalScoreGreedy(_TunerBase):
             score = f * (1.0 + self.alpha * tnorm[:, 0]) + tnorm[:, 1]
         return int(keep[np.argmax(score)])              # line 3
 
+    def _select_many(self, ops, probs, rngs=None):
+        # Vectorized Algorithm 1: masked MinMax + masked argmax per client.
+        # Elementwise formulas and dtypes mirror _select exactly, so each
+        # row's result is bit-identical to the scalar path.
+        theta = self._theta                              # (c, 2)
+        keep = probs > self.tau                          # (n, c)
+        has = keep.any(axis=1)
+        pos = np.float32(np.inf)
+        with np.errstate(invalid="ignore"):
+            lo = np.where(keep[:, :, None], theta[None], pos).min(axis=1)
+            hi = np.where(keep[:, :, None], theta[None], -pos).max(axis=1)
+            tnorm = ((theta[None] - lo[:, None, :])
+                     / np.maximum(hi - lo, 1e-9)[:, None, :])
+            write = np.asarray([o == "write" for o in ops])
+            score_w = probs * (1.0 + self.beta * tnorm.sum(axis=2))
+            score_r = (probs * (1.0 + self.alpha * tnorm[:, :, 0])
+                       + tnorm[:, :, 1])
+            score = np.where(write[:, None], score_w, score_r)
+        score = np.where(keep, score, -np.inf)
+        return np.where(has, np.argmax(score, axis=1), -1)
+
 
 def make_tuner(
     kind: str,
@@ -133,12 +236,15 @@ def make_tuner(
     beta: float = 0.5,
     epsilon: float = 0.1,
     rng: Optional[RngStream] = None,
+    grid_models: Optional[Dict[str, GridProbFn]] = None,
 ) -> _TunerBase:
     if kind == "greedy":
-        return GreedyTuner(spaces, models, tau, alpha, beta, rng)
+        return GreedyTuner(spaces, models, tau, alpha, beta, rng,
+                           grid_models=grid_models)
     if kind == "epsilon_greedy":
         return EpsilonGreedyTuner(spaces, models, tau, alpha, beta, rng,
-                                  epsilon=epsilon)
+                                  epsilon=epsilon, grid_models=grid_models)
     if kind == "conditional_score":
-        return ConditionalScoreGreedy(spaces, models, tau, alpha, beta, rng)
+        return ConditionalScoreGreedy(spaces, models, tau, alpha, beta, rng,
+                                      grid_models=grid_models)
     raise KeyError(f"unknown tuner {kind!r}")

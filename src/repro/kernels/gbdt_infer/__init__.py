@@ -1,4 +1,6 @@
-from repro.kernels.gbdt_infer.ops import gbdt_predict_proba, pack_gbdt
+from repro.kernels.gbdt_infer.ops import (GridGBDTScorer, gbdt_predict_proba,
+                                          pack_gbdt, resolve_backend)
 from repro.kernels.gbdt_infer.ref import gbdt_logits_ref
 
-__all__ = ["gbdt_predict_proba", "pack_gbdt", "gbdt_logits_ref"]
+__all__ = ["GridGBDTScorer", "gbdt_predict_proba", "pack_gbdt",
+           "resolve_backend", "gbdt_logits_ref"]

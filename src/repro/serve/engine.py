@@ -44,12 +44,15 @@ class ServeEngine:
                                       dtype=self.cache_dtype)
         max_prompt = max(len(r.prompt) for r in requests)
         # feed prompts token-by-token (prefill-by-decode keeps one code path
-        # for every family, incl. recurrent states)
-        tokens = np.zeros((b,), np.int32)
+        # for every family, incl. recurrent states). Each step gets a fresh
+        # token array: jnp.asarray can zero-copy alias an aligned numpy
+        # buffer on CPU, so mutating one shared buffer races with the
+        # still-dispatching previous step (observed as flaky nondeterministic
+        # decodes).
         last_logits = None
         for t in range(max_prompt):
-            for i, r in enumerate(requests):
-                tokens[i] = r.prompt[min(t, len(r.prompt) - 1)]
+            tokens = np.array([r.prompt[min(t, len(r.prompt) - 1)]
+                               for r in requests], np.int32)
             logits, cache = self._decode(
                 self.params, jnp.asarray(tokens), cache,
                 jnp.full((b,), t, jnp.int32))

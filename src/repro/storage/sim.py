@@ -21,6 +21,13 @@ from repro.utils.rng import RngStream
 # set_cache_limit on its own client only.
 Controller = Callable[[IOClient, float, float], None]
 
+# fleet callback: (clients, t, dt) -> None; invoked once per step with every
+# client, so a fleet engine can batch its per-client tuning into one
+# vectorized call (repro.core.fleet.FleetController). Each member controller
+# still only reads its own client's counters — the batching is compute
+# shape, not extra observability.
+FleetHook = Callable[[Sequence[IOClient], float, float], None]
+
 
 @dataclass
 class SimResult:
@@ -67,10 +74,16 @@ class Simulation:
                 stripe_offset=offset,
             ))
         self.controllers: Dict[int, Controller] = {}
+        self.fleets: List[FleetHook] = []
         self.t = 0.0
 
     def attach_controller(self, client_id: int, controller: Controller) -> None:
         self.controllers[client_id] = controller
+
+    def attach_fleet(self, fleet: FleetHook) -> None:
+        """Attach a fleet controller invoked once per step with all clients
+        (batched stage-1 tuning), after any per-client controllers."""
+        self.fleets.append(fleet)
 
     def step(self) -> None:
         dt = self.interval_s
@@ -83,6 +96,8 @@ class Simulation:
         # controllers run after counters update (probe -> tune, Fig 4)
         for cid, ctrl in self.controllers.items():
             ctrl(self.clients[cid], self.t, dt)
+        for fleet in self.fleets:
+            fleet(self.clients, self.t, dt)
 
     def run(self, duration_s: float) -> SimResult:
         n_steps = int(round(duration_s / self.interval_s))

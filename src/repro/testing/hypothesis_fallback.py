@@ -1,0 +1,184 @@
+"""Bounded stand-in for the `hypothesis` property-testing API.
+
+The tier-1 suite uses a small slice of hypothesis (``given``, ``settings``,
+and six strategies). When the real package is installed it is always
+preferred; when it is absent (minimal containers, air-gapped CI), this
+module is installed into ``sys.modules`` by ``tests/conftest.py`` so the
+suite still collects and the property tests run as seeded random sweeps.
+
+Differences from real hypothesis, by design:
+
+* no shrinking and no example database — failures report the drawn values
+  via the underlying assertion only;
+* draws come from a per-test deterministic PRNG (seeded from the test's
+  qualified name), so runs are reproducible but not adaptive;
+* only the strategies the suite uses are provided.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Optional
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to skip one drawn example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Settings:
+    def __init__(self, max_examples: int = 20, deadline: Any = None, **_: Any):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+
+def settings(max_examples: int = 20, deadline: Any = None, **kw: Any):
+    """Decorator form only (the profile API is not emulated)."""
+    conf = _Settings(max_examples=max_examples, deadline=deadline, **kw)
+
+    def deco(fn):
+        fn._fallback_settings = conf
+        return fn
+
+    return deco
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: Optional[random.Random] = None) -> Any:
+        return self._draw(rng or random.Random())
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda r: f(self._draw(r)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: r.random() < 0.5)
+
+
+def integers(min_value: int = 0, max_value: Optional[int] = None,
+             **_: Any) -> SearchStrategy:
+    lo = int(min_value)
+    hi = lo + 1_000_000 if max_value is None else int(max_value)
+
+    def draw(r: random.Random) -> int:
+        u = r.random()
+        if u < 0.08:
+            return lo
+        if u < 0.16:
+            return hi
+        return r.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: Optional[float] = None,
+           max_value: Optional[float] = None, **_: Any) -> SearchStrategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+
+    def draw(r: random.Random) -> float:
+        u = r.random()
+        if u < 0.08:
+            return lo
+        if u < 0.16:
+            return hi
+        return r.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elts = list(elements)
+    if not elts:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda r: elts[r.randrange(len(elts))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10,
+          **_: Any) -> SearchStrategy:
+    def draw(r: random.Random) -> List[Any]:
+        n = r.randint(min_size, max_size)
+        return [elements.example(r) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(s.example(r) for s in strats))
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda r: value)
+
+
+def one_of(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda r: strats[r.randrange(len(strats))].example(r))
+
+
+def given(*pos_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # positional strategies bind to the trailing parameters, as in
+        # hypothesis; everything else (leading params) is a pytest fixture
+        pos_names = names[len(names) - len(pos_strategies):] \
+            if pos_strategies else []
+        strategies = dict(zip(pos_names, pos_strategies))
+        strategies.update(kw_strategies)
+        fixture_params = [sig.parameters[n] for n in names
+                          if n not in strategies]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_fallback_settings", None) or _Settings()
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < conf.max_examples and attempts < conf.max_examples * 20:
+                attempts += 1
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                # mirror hypothesis' Unsatisfied: a test whose assume()
+                # rejects every draw must not silently pass
+                raise _Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assume() in "
+                    f"{attempts} attempts")
+
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper.is_hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (only call when it is absent)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = sys.modules[__name__]
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("booleans", "integers", "floats", "sampled_from", "lists",
+                 "tuples", "just", "one_of", "SearchStrategy"):
+        setattr(strategies_mod, name, getattr(mod, name))
+    mod.strategies = strategies_mod  # type: ignore[attr-defined]
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies_mod

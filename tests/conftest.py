@@ -5,6 +5,17 @@ import sys
 # exercised via subprocess (test_dryrun_mechanism) so it never leaks
 # XLA_FLAGS into this process.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Prefer real hypothesis when installed; otherwise run the property tests
+# through the bounded in-repo shim so the suite still collects on minimal
+# containers (requirements.txt lists the real dependency).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+
+    hypothesis_fallback.install()
 
 import pytest  # noqa: E402
 

@@ -1,0 +1,162 @@
+"""Fleet tuning engine: batched decisions must equal the per-client path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.types import CaratConfig
+from repro.core import (CaratController, FleetController, NodeCacheArbiter,
+                        default_spaces, make_tuner)
+from repro.core.controller import _StageFactors
+from repro.core.fleet import attach_fleet_to, build_fleet_tuner
+from repro.kernels.gbdt_infer.ops import GridGBDTScorer
+from repro.storage import Simulation, get_workload
+from repro.utils.rng import RngStream
+
+SPACES = default_spaces()
+THETA = SPACES.theta_features()
+NC = len(SPACES.rpc_candidates())
+KINDS = ("greedy", "epsilon_greedy", "conditional_score")
+
+
+def _synthetic_model(salt: float):
+    """Deterministic, batch-invariant pseudo-probabilities in [0, 1]."""
+
+    def model(X):
+        z = np.sin(X.astype(np.float64).sum(axis=1) * 12.9898 + salt)
+        return (z + 1.0) / 2.0
+
+    return model
+
+
+# --------------------------------------------------- tuner-level property
+@settings(max_examples=25, deadline=None)
+@given(kind=st.sampled_from(KINDS), seed=st.integers(0, 10_000),
+       n=st.integers(1, 9))
+def test_propose_many_matches_scalar_synthetic(kind, seed, n):
+    """propose_many == per-client propose for every strategy, any op mix,
+    random feature vectors (generic cross-product fallback path)."""
+    rng = np.random.default_rng(seed)
+    models = {"read": _synthetic_model(0.0), "write": _synthetic_model(1.7)}
+    ops = [("read", "write")[int(rng.integers(2))] for _ in range(n)]
+    feats = rng.normal(size=(n, 20)).astype(np.float32)
+    scalar = [make_tuner(kind, SPACES, models, rng=RngStream(i, "cl"))
+              for i in range(n)]
+    fleet = make_tuner(kind, SPACES, models, rng=RngStream(10**6, "fleet"))
+    expected = [scalar[i].propose(ops[i], feats[i]) for i in range(n)]
+    got = fleet.propose_many(ops, feats,
+                             rngs=[RngStream(i, "cl") for i in range(n)])
+    assert got == expected
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 8),
+       op=st.sampled_from(["read", "write"]))
+def test_grid_scorer_bit_identical(tiny_models, seed, n, op):
+    """GridGBDTScorer (numpy backend) reproduces the scalar cross-product
+    probabilities bit-for-bit — the contract the fleet engine relies on."""
+    model = tiny_models[op]
+    scorer = GridGBDTScorer(model, THETA, backend="numpy")
+    H = np.random.default_rng(seed).normal(size=(n, 20)).astype(np.float32)
+    probs = scorer(H)
+    assert probs.shape == (n, NC)
+    for i in range(n):
+        X = np.concatenate([np.broadcast_to(H[i], (NC, 20)), THETA],
+                           axis=1).astype(np.float32)
+        assert np.array_equal(probs[i], model.predict_proba(X))
+
+
+def test_grid_scorer_jnp_backend_close(tiny_models):
+    model = tiny_models["read"]
+    scorer = GridGBDTScorer(model, THETA, backend="numpy")
+    H = np.random.default_rng(3).normal(size=(4, 20)).astype(np.float32)
+    np.testing.assert_allclose(scorer(H, backend="jnp"), scorer(H),
+                               atol=5e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(KINDS), seed=st.integers(0, 1000),
+       n=st.integers(1, 6))
+def test_propose_many_matches_scalar_gbdt(tiny_models, kind, seed, n):
+    """Same property through the real GBDT pair + grid fast path."""
+    rng = np.random.default_rng(seed)
+    models = {op: m.predict_proba for op, m in tiny_models.items()}
+    grid = {op: GridGBDTScorer(m, THETA, backend="numpy")
+            for op, m in tiny_models.items()}
+    ops = [("read", "write")[int(rng.integers(2))] for _ in range(n)]
+    feats = (rng.normal(size=(n, 20)) * 0.5).astype(np.float32)
+    scalar = [make_tuner(kind, SPACES, models, rng=RngStream(i, "cl"))
+              for i in range(n)]
+    fleet = make_tuner(kind, SPACES, models, rng=RngStream(10**6, "fl"),
+                       grid_models=grid)
+    expected = [scalar[i].propose(ops[i], feats[i]) for i in range(n)]
+    got = fleet.propose_many(ops, feats,
+                             rngs=[RngStream(i, "cl") for i in range(n)])
+    assert got == expected
+
+
+# ------------------------------------------------ controller-level traces
+@pytest.mark.parametrize("kind", KINDS)
+def test_fleet_controller_matches_per_client_trace(tiny_models, kind):
+    """Full simulation: fleet decisions, cache limits, and the resulting
+    I/O trace are identical to attaching the controllers individually."""
+    names = ("s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_1m", "s_wr_rn_8k")
+    cfg = CaratConfig(tuner=kind)
+
+    def build(sim, fleet):
+        ctrls = [CaratController(i, SPACES, tiny_models, cfg,
+                                 arbiter=NodeCacheArbiter(SPACES))
+                 for i in range(len(names))]
+        if fleet:
+            sim.attach_fleet(FleetController(ctrls, tiny_models,
+                                             backend="numpy"))
+        else:
+            for i, c in enumerate(ctrls):
+                sim.attach_controller(i, c)
+        return ctrls
+
+    sim_a = Simulation([get_workload(n) for n in names], seed=5)
+    a = build(sim_a, fleet=False)
+    res_a = sim_a.run(12.0)
+    sim_b = Simulation([get_workload(n) for n in names], seed=5)
+    b = build(sim_b, fleet=True)
+    res_b = sim_b.run(12.0)
+
+    assert [c.decisions for c in a] == [c.decisions for c in b]
+    assert [c.config.dirty_cache_mb for c in sim_a.clients] == \
+           [c.config.dirty_cache_mb for c in sim_b.clients]
+    assert res_a.app_read_bytes == res_b.app_read_bytes
+    assert res_a.app_write_bytes == res_b.app_write_bytes
+
+
+def test_attach_fleet_to_helper(tiny_models):
+    sim = Simulation([get_workload("s_rd_rn_8k"),
+                      get_workload("s_wr_sq_1m")], seed=1)
+    fleet = attach_fleet_to(sim, SPACES, tiny_models,
+                            shared_node_arbiter=True, backend="numpy")
+    sim.run(10.0)
+    assert fleet.decision_count > 0
+    assert fleet.mean_decision_s > 0.0
+    assert len(fleet.decisions) == 2
+
+
+def test_build_fleet_tuner_uses_grid_for_gbdt(tiny_models):
+    tuner = build_fleet_tuner(CaratConfig(), SPACES, tiny_models,
+                              backend="numpy")
+    assert set(tuner.grid_models) == {"read", "write"}
+
+
+# ------------------------------------------------------- stage-2 bugfixes
+def test_retune_preserves_mid_active_stage_factors(tiny_models):
+    """Members that did not cross the inactive->active boundary keep their
+    accumulated factors (regression test for the reset-everyone bug)."""
+    arb = NodeCacheArbiter(SPACES)
+    mid = CaratController(0, SPACES, tiny_models, arbiter=arb)
+    crossing = CaratController(1, SPACES, tiny_models, arbiter=arb)
+    mid.stage_factors.peak_cache_bytes = 123.0
+    mid.was_inactive_long = False            # still mid-active-stage
+    crossing.stage_factors.peak_cache_bytes = 456.0
+    crossing.was_inactive_long = True        # at the boundary
+    arb.retune()
+    assert mid.stage_factors.peak_cache_bytes == 123.0
+    assert crossing.stage_factors.peak_cache_bytes == 0.0
+    assert isinstance(crossing.stage_factors, _StageFactors)

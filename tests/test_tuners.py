@@ -114,6 +114,35 @@ def test_cache_allocation_always_on_grid(rows):
         assert mb in SPACES.dirty_cache_mb
 
 
+def test_cache_budget_exhausted_by_idle_minimums():
+    """Idle minimums above the node budget must not push `remaining`
+    negative (the factor-(3) demands were going negative); active clients
+    degrade to the grid floor instead."""
+    d = [CacheDemand(i, False, 0.0, 0.0, 0.0) for i in range(3)]
+    d.append(CacheDemand(3, True, 10 * 2**20, 0.0, 1.0))
+    out = cache_allocation(d, SPACES, node_budget_mb=SPACES.cache_min * 2)
+    assert out[3] == SPACES.cache_min
+    for i in range(3):
+        assert out[i] == SPACES.cache_min
+
+
+@settings(max_examples=30, deadline=None)
+@given(budget=st.floats(0, 512),
+       rows=st.lists(st.tuples(st.booleans(), st.floats(0, 4e9),
+                               st.floats(0, 4e9), st.floats(0, 1)),
+                     min_size=1, max_size=6))
+def test_cache_allocation_tight_budgets_stay_on_grid(budget, rows):
+    """Under arbitrarily tight budgets every allocation is a valid grid
+    value >= the minimum (no negative-demand artifacts)."""
+    demands = [CacheDemand(i, a, pc, pi, w)
+               for i, (a, pc, pi, w) in enumerate(rows)]
+    out = cache_allocation(demands, SPACES, node_budget_mb=budget)
+    assert set(out) == {d.client_id for d in demands}
+    for mb in out.values():
+        assert mb in SPACES.dirty_cache_mb
+        assert mb >= SPACES.cache_min
+
+
 def test_snap_cache_up():
     assert SPACES.snap_cache_up(0) == SPACES.cache_min
     assert SPACES.snap_cache_up(65) == 128
