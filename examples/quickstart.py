@@ -11,6 +11,14 @@ decisions bit-identical to the per-client loop. The scoring backend is
 chosen per call by ``kernels/gbdt_infer`` ("auto": factorized numpy on
 CPU hosts, the Pallas kernel on TPU hosts once the batch fills a block).
 
+Part 3 makes the deployment multi-node: a client -> node topology wires
+one stage-2 cache arbiter per node, every node's pending I/O-phase
+boundary in a step is drained into ONE vectorized Algorithm 2 call over
+the whole ``(nodes, clients)`` demand tensor (decision-identical to the
+per-node scalar arbiter — see ``benchmarks/bench_cache_fleet.py``), and
+opt-in budget trading lets nodes whose clients all fit at ``cache_max``
+lend their unused budget to oversubscribed neighbours.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -68,6 +76,34 @@ def main():
           f"one {ov['batch_ms']:.2f} ms batch scores every client)")
     print("decisions are bit-identical to the per-client loop — see "
           "benchmarks/bench_fleet_scale.py")
+
+    # -- Part 3: multi-node stage-2 — topology + budget trading -------------
+    print("\n== multi-node stage-2: 4 nodes x 4 clients, budget trading ==")
+    names = ["dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m"] * 4
+    # client i lives on node i // 4; the topology can also be passed to
+    # attach_fleet_to directly instead of declaring it on the simulation
+    node_sim = Simulation([get_workload(n) for n in names], seed=7,
+                          topology=[i // 4 for i in range(16)])
+    # starve the odd nodes, oversize the even ones: trading moves the
+    # surplus at each drain (never exceeding the summed node budgets)
+    spaces_max = spaces.cache_max
+    fleet = attach_fleet_to(
+        node_sim, spaces, models,
+        node_budgets_mb={0: 6.0 * spaces_max, 1: 1.0 * spaces_max,
+                         2: 6.0 * spaces_max, 3: 1.0 * spaces_max},
+        budget_trading=True)
+    res = node_sim.run(20.0)
+    ov = fleet.overheads()
+    print(f"aggregate throughput: {res.aggregate_throughput/1e6:7.1f} MB/s")
+    print(f"stage-2: {fleet.boundary_count} client boundaries drained as "
+          f"{fleet.node_retune_count} node arbitrations in "
+          f"{fleet.arbiter_batch_count} batched calls "
+          f"({ov['stage2_node_ms']*1e3:.0f} us per node arbitration)")
+    print("per-node cache limits after tuning:")
+    by_id = {c.client_id: c for c in node_sim.clients}
+    for node, cids in node_sim.node_clients().items():
+        mbs = [by_id[c].config.dirty_cache_mb for c in cids]
+        print(f"   node {node}: {mbs} MB")
 
 
 if __name__ == "__main__":

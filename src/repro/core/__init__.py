@@ -13,7 +13,9 @@ from repro.core.rpc_tuner import (
     EpsilonGreedyTuner,
     make_tuner,
 )
-from repro.core.cache_tuner import cache_allocation
+from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,
+                                    cache_allocation, cache_allocation_many,
+                                    trade_node_budgets)
 from repro.core.controller import CaratController, NodeCacheArbiter
 from repro.core.fleet import FleetController, attach_fleet_to, build_fleet_tuner
 
@@ -21,6 +23,8 @@ __all__ = [
     "CaratSpaces", "default_spaces", "Metrics", "compute_metrics",
     "FEATURE_NAMES", "SnapshotBuilder", "Snapshot",
     "ConditionalScoreGreedy", "GreedyTuner", "EpsilonGreedyTuner",
-    "make_tuner", "cache_allocation", "CaratController", "NodeCacheArbiter",
+    "make_tuner", "cache_allocation", "cache_allocation_many",
+    "CacheDemand", "CacheDemandBatch", "trade_node_budgets",
+    "CaratController", "NodeCacheArbiter",
     "FleetController", "attach_fleet_to", "build_fleet_tuner",
 ]

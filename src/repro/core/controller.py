@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.config.types import CaratConfig
 from repro.core.cache_tuner import CacheDemand, cache_allocation
@@ -52,12 +52,32 @@ class _StageFactors:
 
 
 class NodeCacheArbiter:
-    """Stage-2 stats collector + cache tuner for all clients on one node."""
+    """Stage-2 stats collector + cache tuner for all clients on one node.
 
-    def __init__(self, spaces: CaratSpaces, node_budget_mb: Optional[float] = None):
+    The arbitration is a collect -> allocate -> apply pipeline (mirroring
+    the stage-1 observe/actuate split): :meth:`collect` extracts each
+    member's stage factors as :class:`CacheDemand` rows, the allocation
+    runs Algorithm 2 (scalar :func:`cache_allocation` here, or
+    :func:`~repro.core.cache_tuner.cache_allocation_many` when a fleet
+    batches many nodes into one call), and :meth:`apply` actuates the
+    limits and resets boundary members' factors.
+
+    ``deferred=True`` queues boundary events instead of retuning inline:
+    a fleet controller drains every pending node's boundary once per step
+    into a single batched allocation — so a node retunes at most once per
+    step even when several members cross together. Inline (default) mode
+    keeps the paper's per-client semantics: every crossing retunes
+    immediately.
+    """
+
+    def __init__(self, spaces: CaratSpaces, node_budget_mb: Optional[float] = None,
+                 deferred: bool = False):
         self.spaces = spaces
         self.node_budget_mb = node_budget_mb
         self.members: List["CaratController"] = []
+        self.deferred = deferred
+        self.pending = False
+        self._crossed: List["CaratController"] = []
 
     def register(self, ctrl: "CaratController") -> None:
         self.members.append(ctrl)
@@ -67,27 +87,76 @@ class NodeCacheArbiter:
             return self.node_budget_mb
         return self.spaces.cache_max * max(len(self.members), 1) * 0.75
 
-    def retune(self) -> Dict[int, int]:
-        demands: List[CacheDemand] = []
-        total_write = sum(m.stage_factors.write_rpcs for m in self.members) or 1.0
-        for m in self.members:
-            f = m.stage_factors
-            demands.append(CacheDemand(
-                client_id=m.client_id,
-                active=f.saw_activity,
-                peak_cache_bytes=f.peak_cache_bytes,
-                peak_inflight_bytes=f.peak_inflight_bytes,
-                write_rpc_share=f.write_rpcs / total_write,
-            ))
-        alloc = cache_allocation(demands, self.spaces, self.budget())
+    # --- collect / apply pipeline --------------------------------------------
+    def collect(self) -> List[CacheDemand]:
+        """Demand extraction: one row per member, in registration order.
+
+        Passes each member's raw write-RPC volume as the factor-(3)
+        weight — the allocator owns the (single) normalization.
+        """
+        return [CacheDemand(
+            client_id=m.client_id,
+            active=m.stage_factors.saw_activity,
+            peak_cache_bytes=m.stage_factors.peak_cache_bytes,
+            peak_inflight_bytes=m.stage_factors.peak_inflight_bytes,
+            write_rpc_share=m.stage_factors.write_rpcs,
+        ) for m in self.members]
+
+    def collect_rows(self) -> tuple:
+        """:meth:`collect` as five parallel field rows (member order) for
+        ``CacheDemandBatch.from_rows`` — the fleet drain's fast path, which
+        skips the per-member :class:`CacheDemand` objects."""
+        ms = self.members
+        return ([m.client_id for m in ms],
+                [m.stage_factors.saw_activity for m in ms],
+                [m.stage_factors.peak_cache_bytes for m in ms],
+                [m.stage_factors.peak_inflight_bytes for m in ms],
+                [m.stage_factors.write_rpcs for m in ms])
+
+    def apply(self, alloc: Dict[int, int]) -> None:
+        """Actuate an allocation and close out boundary members' stages."""
         for m in self.members:
             if m.client is not None and m.client_id in alloc:
                 m.client.set_cache_limit(alloc[m.client_id])
             # Only clients at an inactive->active boundary have finished the
             # stage their factors describe; clients still mid-active-stage
-            # keep accumulating toward their own next boundary.
-            if m.was_inactive_long:
+            # keep accumulating toward their own next boundary. (Deferred
+            # crossings have already cleared their flag, hence _crossed.)
+            if m.was_inactive_long or m in self._crossed:
                 m.stage_factors = _StageFactors()
+        self._crossed.clear()
+        self.pending = False
+
+    def apply_slots(self, values: Sequence[int]) -> None:
+        """:meth:`apply` from a positional allocation row (slot order =
+        member order, as produced by :meth:`collect_rows` + the batched
+        allocator); padding beyond the member count is ignored."""
+        for m, v in zip(self.members, values):
+            if m.client is not None:
+                m.client.set_cache_limit(v)
+            if m.was_inactive_long or m in self._crossed:
+                m.stage_factors = _StageFactors()
+        self._crossed.clear()
+        self.pending = False
+
+    @property
+    def crossings(self) -> int:
+        """Members queued at a boundary since the last (deferred) apply."""
+        return len(self._crossed)
+
+    def mark_boundary(self, member: "CaratController") -> None:
+        """A member hit its inactive->active boundary: retune now (inline
+        mode) or queue for the fleet's end-of-step drain (deferred)."""
+        if self.deferred:
+            self.pending = True
+            self._crossed.append(member)
+        else:
+            self.retune()
+
+    def retune(self) -> Dict[int, int]:
+        """Scalar compatibility path: collect -> Algorithm 2 -> apply."""
+        alloc = cache_allocation(self.collect(), self.spaces, self.budget())
+        self.apply(alloc)
         return alloc
 
 
@@ -153,7 +222,7 @@ class CaratController:
 
         # I/O resumed after a long-enough inactive stage: stage-2 boundary
         if self.was_inactive_long and self.arbiter is not None:
-            self.arbiter.retune()
+            self.arbiter.mark_boundary(self)
         self.was_inactive_long = False
         self.inactive_s = 0.0
 

@@ -57,7 +57,18 @@ class Simulation:
         seed: int = 0,
         interval_s: float = 0.5,
         stripe_offsets: Optional[Sequence[int]] = None,
+        topology: Optional[Sequence[object]] = None,
     ):
+        if topology is not None:
+            topology = list(topology)
+            if len(topology) != len(workloads):
+                raise ValueError(
+                    f"topology maps {len(topology)} clients but the "
+                    f"simulation has {len(workloads)} workloads")
+        # client -> node map (position-aligned with `clients`); consumed by
+        # repro.core.fleet.attach_fleet_to to wire one stage-2 cache
+        # arbiter per node. None = no multi-node structure declared.
+        self.topology = topology
         self.p = params or PFSParams()
         self.interval_s = interval_s
         self.rng = RngStream(seed, "sim")
@@ -84,6 +95,17 @@ class Simulation:
         """Attach a fleet controller invoked once per step with all clients
         (batched stage-1 tuning), after any per-client controllers."""
         self.fleets.append(fleet)
+
+    def node_clients(self) -> Dict[object, List[int]]:
+        """Node id -> client ids, from the declared topology. With no
+        topology declared, each client is its own node (matching
+        ``attach_fleet_to``'s private-arbiter default)."""
+        topo = self.topology if self.topology is not None \
+            else list(range(len(self.clients)))
+        out: Dict[object, List[int]] = {}
+        for c, node in zip(self.clients, topo):
+            out.setdefault(node, []).append(c.client_id)
+        return out
 
     def step(self) -> None:
         dt = self.interval_s

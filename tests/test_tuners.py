@@ -143,6 +143,28 @@ def test_cache_allocation_tight_budgets_stay_on_grid(budget, rows):
         assert mb >= SPACES.cache_min
 
 
+def test_cache_allocation_normalizes_write_share_once():
+    """Regression for the double normalization: NodeCacheArbiter used to
+    pre-divide each member's write volume by the node total before
+    cache_allocation renormalized again. The allocator now owns the only
+    normalization, and — since factor (3) is scale-invariant — raw
+    volumes must yield the exact allocations the pre-divided shares did."""
+    from dataclasses import replace
+
+    raw = [
+        CacheDemand(0, True, 5 * 2**20, 0.0, 3.0e6),
+        CacheDemand(1, True, 0.0, 9 * 2**20, 1.0e6),
+        CacheDemand(2, False, 0.0, 0.0, 2.0e6),    # idle still carries volume
+        CacheDemand(3, True, 2**20, 2**20, 0.0),
+    ]
+    total = sum(d.write_rpc_share for d in raw)    # old arbiter-side divisor
+    pre_divided = [replace(d, write_rpc_share=d.write_rpc_share / total)
+                   for d in raw]
+    for budget in (256.0, 1024.0, 3000.0):
+        assert cache_allocation(raw, SPACES, budget) == \
+               cache_allocation(pre_divided, SPACES, budget)
+
+
 def test_snap_cache_up():
     assert SPACES.snap_cache_up(0) == SPACES.cache_min
     assert SPACES.snap_cache_up(65) == 128
