@@ -226,6 +226,14 @@ class CaratConfig:
     model: str = "gbdt"                  # svm | fcnn | rnn | tcn | gbdt
     inactive_threshold_s: float = 1.0    # I/O-inactive boundary (>1 s, §III-A)
     use_pallas_inference: bool = True    # score config space via the Pallas kernel
+    # phase re-probing (replayed/dynamic workloads): when the app-level I/O
+    # signature shifts (op-mix flip or >reprobe_req_ratio request-size
+    # change), reset RPC params to the space default — the trained model's
+    # confident region — and re-tune from there (IOPathTune/DIAL-style
+    # change response; static workloads never trigger it)
+    reprobe_on_change: bool = True
+    reprobe_req_ratio: float = 2.0       # request-size shift that counts
+    reprobe_cooldown_s: float = 2.0      # min time between resets
 
 
 @dataclass(frozen=True)

@@ -20,13 +20,47 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.config.types import CaratConfig
 from repro.core.cache_tuner import CacheDemand, cache_allocation
 from repro.core.policy import CaratSpaces
 from repro.core.rpc_tuner import _TunerBase, make_tuner
 from repro.core.snapshot import Snapshot, SnapshotBuilder
 from repro.storage.client import IOClient
+from repro.storage.params import PAGE_SIZE
 from repro.utils.rng import RngStream
+
+
+@dataclass
+class _AppSignature:
+    """Config-independent workload fingerprint from one active snapshot."""
+    read_share: float                   # app read bytes / total app bytes
+    req_read: Optional[float] = None    # mean app request size (bytes)
+    req_write: Optional[float] = None
+
+    @classmethod
+    def of(cls, snap: Snapshot) -> "_AppSignature":
+        total = snap.read_app_bytes + snap.write_app_bytes
+        share = snap.read_app_bytes / total if total > 0 else 0.0
+        rr = (snap.read_app_bytes / snap.read_app_requests
+              if snap.read_app_requests > 0.5 else None)
+        rw = (snap.write_app_bytes / snap.write_app_requests
+              if snap.write_app_requests > 0.5 else None)
+        return cls(read_share=share, req_read=rr, req_write=rw)
+
+    def changed_from(self, prev: "_AppSignature", req_ratio: float) -> bool:
+        # strong op-mix flip (read-dominant <-> write-dominant)
+        if ((prev.read_share >= 0.7 and self.read_share <= 0.3)
+                or (prev.read_share <= 0.3 and self.read_share >= 0.7)):
+            return True
+        for a, b in ((prev.req_read, self.req_read),
+                     (prev.req_write, self.req_write)):
+            if a is not None and b is not None:
+                lo, hi = sorted((a, b))
+                if hi > lo * req_ratio:
+                    return True
+        return False
 
 
 @dataclass
@@ -44,7 +78,7 @@ class _StageFactors:
         self.peak_cache_bytes = max(self.peak_cache_bytes,
                                     snap.write.dirty_cache_util * cache_bytes)
         vol = snap.read.data_volume + snap.write.data_volume
-        inflight_bytes = snap.inflight_peak * snap.window_pages * 4096.0
+        inflight_bytes = snap.inflight_peak * snap.window_pages * float(PAGE_SIZE)
         self.peak_inflight_bytes = max(self.peak_inflight_bytes, inflight_bytes)
         # RPC mix for factor (3)
         self.write_rpcs += snap.write.data_volume
@@ -191,6 +225,11 @@ class CaratController:
         self.inactive_s = 0.0
         self.was_inactive_long = False
         self.stage_factors = _StageFactors()
+        # phase-change re-probing state (replayed/dynamic workloads)
+        self._last_sig: Optional[_AppSignature] = None
+        self._last_reprobe_t = -float("inf")
+        self._reprobe_pending = False
+        self._bootstrap_pending = False
         self.client: Optional[IOClient] = None
         # Table VIII accounting
         self.apply_time_total = 0.0
@@ -226,10 +265,54 @@ class CaratController:
         self.was_inactive_long = False
         self.inactive_s = 0.0
 
+        # phase-change re-probe: the tuner's model is only confident near
+        # the default config (it was trained on random excursions from
+        # it), so a workload shift observed at a tuned config would leave
+        # it silent below tau forever. Detect the shift from the
+        # config-independent app signature and reset RPC params to the
+        # space default — the next probes re-tune from the model's
+        # confident region (IOPathTune/DIAL-style change response).
+        if self.cfg.reprobe_on_change:
+            sig = _AppSignature.of(snap)
+            prev_sig, self._last_sig = self._last_sig, sig
+            if (prev_sig is not None
+                    and sig.changed_from(prev_sig,
+                                         self.cfg.reprobe_req_ratio)):
+                # deferred, not dropped: a change detected mid-cooldown
+                # still re-probes once the cooldown expires
+                self._reprobe_pending = True
+            if (self._reprobe_pending and t - self._last_reprobe_t
+                    >= self.cfg.reprobe_cooldown_s):
+                self._reprobe_pending = False
+                self._last_reprobe_t = t
+                self._bootstrap_pending = True
+                default = (self.spaces.default_rpc_window,
+                           self.spaces.default_in_flight)
+                if (client.config.rpc_window_pages,
+                        client.config.rpcs_in_flight) != default:
+                    client.set_rpc_config(*default)
+                    self.decisions.append((t, "reprobe") + default)
+                    return None
+                # already at default: fall through — this probe's features
+                # were measured at default, so bootstrap right away
+
         # stage-1 RPC tuning, every probe interval
         op = snap.dominant_op
         feats = self.builder.feature_vector(op)
         if feats is None:
+            return None
+        if self._bootstrap_pending:
+            # first probe after a re-probe reset: the model ranks regimes
+            # well but calibrates conservatively away from its training
+            # distribution, so the tau gate alone can leave a fresh phase
+            # untuned. Take one tau-free greedy pick (scalar inference in
+            # both the per-client and fleet paths, so decisions stay
+            # bit-identical); every later probe is tau-gated as usual.
+            self._bootstrap_pending = False
+            probs = self.tuner._probs(op, feats)
+            w, f = self.spaces.rpc_candidates()[int(np.argmax(probs))]
+            self.client.set_rpc_config(w, f)
+            self.decisions.append((t, "bootstrap", w, f))
             return None
         return op, feats
 

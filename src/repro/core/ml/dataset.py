@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,6 +19,8 @@ from repro.core.policy import CaratSpaces, default_spaces
 from repro.core.snapshot import SnapshotBuilder
 from repro.storage.client import ClientConfig, IOClient
 from repro.storage.params import PFSParams
+from repro.storage.replay import (WorkloadSchedule, schedule_from_names,
+                                  simulation_from_schedules)
 from repro.storage.sim import Simulation
 from repro.storage.workloads import get_workload, training_workloads
 from repro.utils.logging import get_logger
@@ -99,59 +101,7 @@ class _Collector:
         client.set_rpc_config(w, f)
 
 
-def collect_training_data(
-    workload_names: Optional[Sequence[str]] = None,
-    reps: int = 6,
-    duration_s: float = 60.0,
-    interval_s: float = 0.5,
-    improve_eps: float = 0.15,
-    spaces: Optional[CaratSpaces] = None,
-    params: Optional[PFSParams] = None,
-    seed: int = 0,
-    ambient_frac: float = 0.33,
-) -> TrainingData:
-    """ambient_frac of the reps run with an uncontrolled background client
-    on an overlapping OST — the tuned client still observes ONLY its local
-    metrics, but the sweep then covers contended server states the way the
-    paper's shared testbed naturally did. Without this, the model never
-    sees high-latency/low-grant states and stays silent under interference
-    (paper §IV-H)."""
-    spaces = spaces or default_spaces()
-    names = list(workload_names or training_workloads())
-    rows: Dict[str, List[Tuple[np.ndarray, int]]] = {"read": [], "write": []}
-    root = RngStream(seed, "collect")
-    ambient_pool = ["s_wr_sq_16m", "s_rd_sq_1m", "s_wr_rn_1m", "s_rd_sq_16m"]
-    for rep in range(reps):
-        ambient = (ambient_frac > 0
-                   and rep % max(int(round(1 / max(ambient_frac, 1e-9))), 1)
-                   == 1)
-        for wi, name in enumerate(names):
-            wl = get_workload(name)
-            # stable per-workload seed (hash() is process-randomized)
-            name_h = int.from_bytes(
-                hashlib.sha256(name.encode()).digest()[:4], "little")
-            if ambient:
-                noise = get_workload(ambient_pool[(rep + wi)
-                                                  % len(ambient_pool)])
-                sim = Simulation([wl, noise], params=params,
-                                 configs=[ClientConfig(), ClientConfig()],
-                                 seed=seed * 1000 + rep * 37 + name_h % 997,
-                                 interval_s=interval_s,
-                                 stripe_offsets=[0, 0])
-            else:
-                sim = Simulation([wl], params=params,
-                                 configs=[ClientConfig()],
-                                 seed=seed * 1000 + rep * 37 + name_h % 997,
-                                 interval_s=interval_s)
-            coll = _Collector(spaces, interval_s, improve_eps,
-                              root.fork(f"{name}/{rep}"))
-            sim.attach_controller(0, coll)
-            sim.run(duration_s)
-            for op in ("read", "write"):
-                rows[op].extend(coll.rows[op])
-    log.info("collected %d read / %d write samples",
-             len(rows["read"]), len(rows["write"]))
-
+def _stack_rows(rows: Dict[str, List[Tuple[np.ndarray, int]]]) -> TrainingData:
     def _stack(op):
         if not rows[op]:
             from repro.core.snapshot import FEATURE_DIM, THETA_DIM
@@ -164,3 +114,121 @@ def collect_training_data(
     Xr, yr = _stack("read")
     Xw, yw = _stack("write")
     return TrainingData(X_read=Xr, y_read=yr, X_write=Xw, y_write=yw)
+
+
+def collect_training_data(
+    workload_names: Optional[Sequence[str]] = None,
+    reps: int = 6,
+    duration_s: float = 60.0,
+    interval_s: float = 0.5,
+    improve_eps: float = 0.15,
+    spaces: Optional[CaratSpaces] = None,
+    params: Optional[PFSParams] = None,
+    seed: int = 0,
+    ambient_frac: float = 0.33,
+    phased_frac: float = 0.0,
+    phase_gap_s: float = 2.0,
+) -> TrainingData:
+    """ambient_frac of the reps run with an uncontrolled background client
+    on an overlapping OST — the tuned client still observes ONLY its local
+    metrics, but the sweep then covers contended server states the way the
+    paper's shared testbed naturally did. Without this, the model never
+    sees high-latency/low-grant states and stays silent under interference
+    (paper §IV-H).
+
+    phased_frac of the reps replace the static workload with a replayed
+    multi-phase schedule (three sweep workloads back-to-back with idle
+    gaps, `repro.storage.replay`), so the sweep also labels the
+    phase-transition states an online deployment actually tunes through —
+    the dynamic-pattern regime of Fig 7. Default 0.0 keeps the paper's
+    single-stream protocol (and the cached default models) unchanged."""
+    spaces = spaces or default_spaces()
+    names = list(workload_names or training_workloads())
+    rows: Dict[str, List[Tuple[np.ndarray, int]]] = {"read": [], "write": []}
+    root = RngStream(seed, "collect")
+    ambient_pool = ["s_wr_sq_16m", "s_rd_sq_1m", "s_wr_rn_1m", "s_rd_sq_16m"]
+
+    def _cadence(frac, rep, offset):
+        if frac <= 0:
+            return False
+        k = max(int(round(1 / frac)), 1)
+        return rep % k == offset % k
+
+    for rep in range(reps):
+        ambient = _cadence(ambient_frac, rep, 1)
+        phased = _cadence(phased_frac, rep, 2)
+        for wi, name in enumerate(names):
+            wl = get_workload(name)
+            # stable per-workload seed (hash() is process-randomized)
+            name_h = int.from_bytes(
+                hashlib.sha256(name.encode()).digest()[:4], "little")
+            sim_seed = seed * 1000 + rep * 37 + name_h % 997
+            if ambient:
+                noise = get_workload(ambient_pool[(rep + wi)
+                                                  % len(ambient_pool)])
+                sim = Simulation([wl, noise], params=params,
+                                 configs=[ClientConfig(), ClientConfig()],
+                                 seed=sim_seed,
+                                 interval_s=interval_s,
+                                 stripe_offsets=[0, 0])
+            else:
+                sim = Simulation([wl], params=params,
+                                 configs=[ClientConfig()],
+                                 seed=sim_seed,
+                                 interval_s=interval_s)
+            if phased:
+                # replayed multi-phase rep: this workload then two sweep
+                # neighbours, separated by boundary-arming idle gaps
+                rot = [names[(wi + k) % len(names)] for k in range(3)]
+                n_gaps = len(rot) - 1
+                phase_s = max((duration_s - n_gaps * phase_gap_s)
+                              / len(rot), 2 * interval_s)
+                sim.attach_schedule(0, schedule_from_names(
+                    rot, phase_s=phase_s, gap_s=phase_gap_s))
+            coll = _Collector(spaces, interval_s, improve_eps,
+                              root.fork(f"{name}/{rep}"))
+            sim.attach_controller(0, coll)
+            sim.run(duration_s)
+            for op in ("read", "write"):
+                rows[op].extend(coll.rows[op])
+    log.info("collected %d read / %d write samples",
+             len(rows["read"]), len(rows["write"]))
+    return _stack_rows(rows)
+
+
+def collect_replayed_data(
+    schedules: Mapping[int, WorkloadSchedule],
+    reps: int = 4,
+    duration_s: Optional[float] = None,
+    interval_s: float = 0.5,
+    improve_eps: float = 0.15,
+    spaces: Optional[CaratSpaces] = None,
+    params: Optional[PFSParams] = None,
+    seed: int = 0,
+) -> TrainingData:
+    """Labeled samples from replayed phase schedules (bundled trace corpus
+    or `synthesize_trace` output): every scheduled client gets its own
+    random-actuation collector and the whole schedule set replays
+    together, so samples cover phase transitions AND the cross-client
+    contention the trace encodes."""
+    spaces = spaces or default_spaces()
+    if duration_s is None:
+        duration_s = max(s.duration for s in schedules.values())
+    rows: Dict[str, List[Tuple[np.ndarray, int]]] = {"read": [], "write": []}
+    root = RngStream(seed, "collect-replay")
+    for rep in range(reps):
+        sim = simulation_from_schedules(
+            schedules, params=params, seed=seed * 1000 + rep * 41,
+            interval_s=interval_s)
+        colls = {}
+        for cid in sorted(schedules):
+            colls[cid] = _Collector(spaces, interval_s, improve_eps,
+                                    root.fork(f"c{cid}/{rep}"))
+            sim.attach_controller(cid, colls[cid])
+        sim.run(duration_s)
+        for coll in colls.values():
+            for op in ("read", "write"):
+                rows[op].extend(coll.rows[op])
+    log.info("collected %d read / %d write replayed samples",
+             len(rows["read"]), len(rows["write"]))
+    return _stack_rows(rows)

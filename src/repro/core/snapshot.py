@@ -33,6 +33,11 @@ class Snapshot:
     window_pages: int
     in_flight: int
     dirty_cache_mb: int
+    # app-level request deltas: the config-independent workload signature
+    # (request size = app_bytes / app_requests) the phase-change detector
+    # uses — RPC-level metrics would be confounded by the tunables
+    read_app_requests: float = 0.0
+    write_app_requests: float = 0.0
 
     @property
     def active(self) -> bool:
@@ -84,6 +89,8 @@ class SnapshotBuilder:
                 write_active=d_wr["app_requests"] > 0,
                 read_app_bytes=d_rd["app_bytes"],
                 write_app_bytes=d_wr["app_bytes"],
+                read_app_requests=d_rd["app_requests"],
+                write_app_requests=d_wr["app_requests"],
                 dirty_peak_bytes=cur.dirty_peak_bytes,
                 inflight_peak=cur.inflight_peak,
                 window_pages=cur.rpc_window_pages,

@@ -13,12 +13,25 @@ are first-class terms of the model, so the tuning trade-offs CARAT learns are
 the paper's trade-offs, not artifacts.
 """
 from repro.storage.params import PFSParams, PAGE_SIZE
-from repro.storage.workloads import WorkloadSpec, WORKLOADS, get_workload
+from repro.storage.workloads import (WorkloadSpec, WORKLOADS, get_workload,
+                                     idle_workload)
 from repro.storage.client import IOClient, ClientConfig
 from repro.storage.pfs import PFSCluster
 from repro.storage.sim import Simulation, SimResult
+from repro.storage.replay import (Trace, TraceRecord, WorkloadSchedule,
+                                  SchedulePhase, parse_trace, render_trace,
+                                  load_trace, bundled_traces,
+                                  load_bundled_trace, compile_trace,
+                                  segment_phases, schedule_from_names,
+                                  simulation_from_schedules,
+                                  simulation_from_trace, synthesize_trace)
 
 __all__ = [
     "PFSParams", "PAGE_SIZE", "WorkloadSpec", "WORKLOADS", "get_workload",
-    "IOClient", "ClientConfig", "PFSCluster", "Simulation", "SimResult",
+    "idle_workload", "IOClient", "ClientConfig", "PFSCluster", "Simulation",
+    "SimResult", "Trace", "TraceRecord", "WorkloadSchedule", "SchedulePhase",
+    "parse_trace", "render_trace", "load_trace", "bundled_traces",
+    "load_bundled_trace", "compile_trace", "segment_phases",
+    "schedule_from_names", "simulation_from_schedules",
+    "simulation_from_trace", "synthesize_trace",
 ]

@@ -156,6 +156,12 @@ class IOClient:
             plan.write = self._plan_write(t, dt, placement, 1.0, active)
         elif wl.op == "read":
             plan.read = self._plan_read(t, dt, placement, 1.0, active)
+            if self.dirty_bytes > 0:
+                # dirty pages carried from an earlier write phase (replayed
+                # workload switch / trace gap): writeback keeps draining
+                # them even though the foreground op offers no writes
+                plan.write = self._plan_write(t, dt, placement, 0.0, False,
+                                              drain_only=True)
         else:  # mixed: split stream capacity by read_frac
             plan.read = self._plan_read(t, dt, placement, wl.read_frac, active)
             plan.write = self._plan_write(t, dt, placement, 1.0 - wl.read_frac,
@@ -163,7 +169,8 @@ class IOClient:
         return plan
 
     # The write path ----------------------------------------------------------
-    def _plan_write(self, t, dt, placement, share, active) -> _OpPlan:
+    def _plan_write(self, t, dt, placement, share, active,
+                    drain_only=False) -> _OpPlan:
         p, wl, cfg = self.p, self.workload, self.config
         W = cfg.rpc_window_pages
         F = cfg.rpcs_in_flight
@@ -185,16 +192,26 @@ class IOClient:
 
         # (3) extent formation quality -> average pages per RPC.
         run = min(req_pages, W)   # contiguous pages one request contributes
-        if wl.access == "seq":
+        if drain_only or wl.access == "seq":
+            # drain-only: the parked extents are timeout-matured leftovers
+            # of a finished write phase — they dispatch as formed, with no
+            # formation cost tied to the current (read) workload's pattern
             p_eff = float(W)
+        elif wl.access == "strided":
+            # strided (MPI-IO style): block starts repeat every
+            # stride_bytes, so a W-page extent deterministically fills to
+            # W * (req/stride) pages laid out as runs of req_pages — the
+            # dirty contiguity is min(stride run, window), structural
+            # rather than arrival-limited like random.
+            fill_pages = float(W) * min(R / wl.stride_bytes, 1.0)
+            p_eff = min(float(W), max(float(run), fill_pages))
         else:
-            # random/strided: expected fill of an extent within one timeout
+            # random: expected fill of an extent within one timeout
             # window, from uniform page arrivals over the file's extents.
             lam_pages = max(self.last_drain, lam_bytes * 0.25) / PAGE_SIZE
             n_extents = max(wl.file_bytes / (W * PAGE_SIZE), 1.0)
             density = lam_pages * p.extent_timeout_s / n_extents
-            base = run if wl.access == "random" else max(1.0, run * 0.5)
-            p_eff = min(float(W), max(float(base), density))
+            p_eff = min(float(W), max(float(run), density))
         fill_frac = p_eff / W     # 1.0 => extents mature by filling, no wait
 
         # (4) grant fragmentation from open partial extents (§II-A a): each
@@ -272,12 +289,22 @@ class IOClient:
         demands: List[ChannelDemand] = []
         n_ch = max(len(placement), 1)
         terms: Dict[str, float] = {}
-        if wl.access == "seq":
+        if wl.access in ("seq", "strided"):
             # readahead keeps a byte-sized window of max-size RPCs in flight:
             # outstanding RPCs = RA_bytes / rpc_bytes — smaller RPC windows
             # pipeline deeper (up to max_rpcs_in_flight), which is the
             # mechanism behind the paper's (64, 256) seq-read optimum.
-            p_eff = float(W)
+            # Strided reads are stride-detected (llite's stride readahead):
+            # they pipeline like seq, but each RPC carries only one
+            # contiguous run (min(stride run, window)) and the readahead
+            # window spans the gaps, so only the req/stride useful fraction
+            # of it pipelines.
+            if wl.access == "seq":
+                p_eff = float(W)
+                ra_frac = 1.0
+            else:
+                p_eff = float(min(req_pages, W))
+                ra_frac = min(R / wl.stride_bytes, 1.0)
             rpc_bytes = p_eff * PAGE_SIZE
             cap_total = 0.0
             for ost, streams_here in placement.items():
@@ -285,7 +312,7 @@ class IOClient:
                 t_rpc = (p.net_rtt_s + wait + p.ost_fixed_cpu_s
                          + rpc_bytes / p.ost_disk_bw + rpc_bytes / p.nic_bw)
                 depth = min(float(F),
-                            max(1.0, p.readahead_bytes / rpc_bytes)
+                            max(1.0, p.readahead_bytes * ra_frac / rpc_bytes)
                             * streams_here * share)
                 cap = min(depth * rpc_bytes / t_rpc, p.nic_bw / n_ch,
                           lam_bytes / n_ch)

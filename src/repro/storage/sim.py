@@ -9,7 +9,7 @@ controller — controllers only see their own client's counters.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.storage.client import ClientConfig, IOClient
 from repro.storage.params import PFSParams
@@ -27,6 +27,11 @@ Controller = Callable[[IOClient, float, float], None]
 # still only reads its own client's counters — the batching is compute
 # shape, not extra observability.
 FleetHook = Callable[[Sequence[IOClient], float, float], None]
+
+# schedule duck type: anything with ``spec_at(t) -> WorkloadSpec`` (the
+# canonical implementation is repro.storage.replay.WorkloadSchedule; kept
+# structural so sim never imports the replay layer).
+ScheduleLike = object
 
 
 @dataclass
@@ -58,6 +63,7 @@ class Simulation:
         interval_s: float = 0.5,
         stripe_offsets: Optional[Sequence[int]] = None,
         topology: Optional[Sequence[object]] = None,
+        client_ids: Optional[Sequence[int]] = None,
     ):
         if topology is not None:
             topology = list(topology)
@@ -73,23 +79,55 @@ class Simulation:
         self.interval_s = interval_s
         self.rng = RngStream(seed, "sim")
         self.cluster = PFSCluster(self.p, self.rng.fork("cluster"))
+        # client ids default to dense positions, but replayed traces (and
+        # real deployments) carry arbitrary ids — everything downstream
+        # resolves clients by id, never by list position.
+        if client_ids is None:
+            ids = list(range(len(workloads)))
+        else:
+            ids = [int(i) for i in client_ids]
+            if len(ids) != len(workloads):
+                raise ValueError(f"client_ids names {len(ids)} clients but "
+                                 f"the simulation has {len(workloads)} "
+                                 f"workloads")
+            if len(set(ids)) != len(ids):
+                raise ValueError(f"client_ids must be unique, got {ids}")
         self.clients: List[IOClient] = []
-        for i, wl in enumerate(workloads):
+        for i, (cid, wl) in enumerate(zip(ids, workloads)):
             cfg = (ClientConfig(**vars(configs[i])) if configs is not None
                    else ClientConfig())
             offset = (stripe_offsets[i] if stripe_offsets is not None
                       else (i * 3) % self.p.n_osts)
             self.clients.append(IOClient(
-                client_id=i, params=self.p, workload=wl, config=cfg,
-                rng=self.rng.fork(f"client{i}"),
+                client_id=cid, params=self.p, workload=wl, config=cfg,
+                rng=self.rng.fork(f"client{cid}"),
                 stripe_offset=offset,
             ))
         self.controllers: Dict[int, Controller] = {}
         self.fleets: List[FleetHook] = []
+        # client id -> phase schedule (repro.storage.replay); consulted at
+        # the top of every step, so workload switches land exactly on
+        # interval boundaries with carried state (dirty cache, last_wait)
+        # deliberately preserved across the switch.
+        self.schedules: Dict[int, "ScheduleLike"] = {}
         self.t = 0.0
 
+    def client_by_id(self, client_id: int) -> IOClient:
+        for c in self.clients:
+            if c.client_id == client_id:
+                return c
+        raise KeyError(f"no client with id {client_id} (got "
+                       f"{sorted(c.client_id for c in self.clients)})")
+
     def attach_controller(self, client_id: int, controller: Controller) -> None:
+        self.client_by_id(client_id)     # fail fast on unknown ids
         self.controllers[client_id] = controller
+
+    def attach_schedule(self, client_id: int, schedule: "ScheduleLike") -> None:
+        """Drive a client's workload from a time-ordered phase schedule
+        (any object with ``spec_at(t) -> WorkloadSpec``)."""
+        self.client_by_id(client_id)
+        self.schedules[client_id] = schedule
 
     def attach_fleet(self, fleet: FleetHook) -> None:
         """Attach a fleet controller invoked once per step with all clients
@@ -109,15 +147,31 @@ class Simulation:
 
     def step(self) -> None:
         dt = self.interval_s
+        by_id = {c.client_id: c for c in self.clients}
+        # replayed phase schedules switch workloads at interval boundaries;
+        # set_workload swaps only the demand descriptor, so carried state
+        # (dirty cache, last_wait, last_drain) survives the switch
+        for cid, sched in self.schedules.items():
+            client = by_id[cid]
+            spec = sched.spec_at(self.t)
+            if spec is not client.workload:
+                client.set_workload(spec)
         plans = [c.plan(self.t, dt, self.p.n_osts) for c in self.clients]
         demands = [d for pl in plans for d in pl.all_demands()]
         fb = self.cluster.resolve(demands, dt)
         for client, plan in zip(self.clients, plans):
             client.commit(plan, fb.scale, fb.waits, dt)
         self.t += dt
-        # controllers run after counters update (probe -> tune, Fig 4)
+        # controllers run after counters update (probe -> tune, Fig 4);
+        # resolved by client id, not list position — controllers over
+        # reordered or non-dense client id sets must not tune the wrong
+        # client (same bug class FleetController fixed in PR 2)
         for cid, ctrl in self.controllers.items():
-            ctrl(self.clients[cid], self.t, dt)
+            client = by_id.get(cid)
+            if client is None:
+                raise KeyError(f"controller bound to client {cid} has no "
+                               f"matching client (got ids {sorted(by_id)})")
+            ctrl(client, self.t, dt)
         for fleet in self.fleets:
             fleet(self.clients, self.t, dt)
 

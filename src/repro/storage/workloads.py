@@ -32,9 +32,12 @@ class WorkloadSpec:
     #                             still-dirty pages (Fig 6(d) mechanism)
     read_frac: float = 0.0      # for op == "mixed"
     think_s: float = 0.0        # per-request app compute time
-    duty_cycle: float = 1.0     # fraction of each period with I/O (bursts)
+    duty_cycle: float = 1.0     # fraction of each period with I/O (bursts);
+    #                             0.0 = fully idle (replay gap phases)
     period_s: float = 1.0       # burst period
-    stride_bytes: int = 0       # for access == "strided"
+    stride_bytes: int = 0       # for access == "strided": distance between
+    #                             consecutive block starts (>= req implied
+    #                             by MPI-IO-style non-overlapping blocks)
     seed_phase: int = 0
 
     def __post_init__(self):
@@ -44,11 +47,22 @@ class WorkloadSpec:
             raise ValueError(f"bad access {self.access}")
         if not (0.0 <= self.inplace_frac <= 1.0):
             raise ValueError("inplace_frac in [0,1]")
-        if not (0.0 < self.duty_cycle <= 1.0):
-            raise ValueError("duty_cycle in (0,1]")
+        if not (0.0 <= self.duty_cycle <= 1.0):
+            raise ValueError("duty_cycle in [0,1]")
+        if self.stride_bytes < 0:
+            raise ValueError("stride_bytes must be >= 0")
+        if self.access == "strided" and self.stride_bytes <= 0:
+            raise ValueError("strided access needs stride_bytes > 0")
+
+    @property
+    def idle(self) -> bool:
+        """A pure gap phase (replay traces): never I/O-active."""
+        return self.duty_cycle <= 0.0
 
     def active(self, t: float) -> bool:
         """Is the workload in its I/O-active phase at time t (bursts)?"""
+        if self.idle:
+            return False
         if self.duty_cycle >= 1.0:
             return True
         return (t % self.period_s) < self.duty_cycle * self.period_s
@@ -165,3 +179,11 @@ def unseen_workloads() -> Tuple[str, ...]:
 
 def with_streams(spec: WorkloadSpec, n: int) -> WorkloadSpec:
     return replace(spec, n_streams=n, name=f"{spec.name}@{n}")
+
+
+def idle_workload(name: str = "idle") -> WorkloadSpec:
+    """A pure gap phase: no I/O is ever offered, but a client holding dirty
+    pages keeps draining them (exactly what a replayed trace gap does — and
+    what arms the stage-2 inactive->active boundary)."""
+    return WorkloadSpec(name=name, op="read", access="seq",
+                        req_bytes=4 * KiB, duty_cycle=0.0)

@@ -92,6 +92,41 @@ def test_interference_couples_clients():
     assert r_shared < 0.9 * r_alone
 
 
+def test_strided_write_beats_random_small_blocks():
+    """stride_bytes is honoured: an MPI-IO-style strided write fills
+    extents structurally (contiguity = min(stride run, window)), unlike
+    arrival-limited random fill."""
+    KiB = 1024
+    strided = WorkloadSpec("st", "write", "strided", 64 * KiB,
+                           stride_bytes=256 * KiB, file_bytes=4 << 30)
+    rand = WorkloadSpec("rn", "write", "random", 64 * KiB,
+                        file_bytes=4 << 30)
+    t_st = run_static(strided, ClientConfig(), duration_s=10.0)
+    t_rn = run_static(rand, ClientConfig(), duration_s=10.0)
+    assert t_st > 1.5 * t_rn
+
+
+def test_strided_read_between_random_and_seq():
+    """Stride-detected readahead pipelines strided reads: faster than
+    latency-bound random, slower than fully sequential."""
+    KiB = 1024
+    mk = lambda acc, stride: WorkloadSpec(  # noqa: E731
+        acc, "read", acc, 8 * KiB, stride_bytes=stride, file_bytes=1 << 30)
+    t_st = run_static(mk("strided", 64 * KiB), ClientConfig(),
+                      duration_s=10.0)
+    t_rn = run_static(mk("random", 0), ClientConfig(), duration_s=10.0)
+    t_sq = run_static(mk("seq", 0), ClientConfig(), duration_s=10.0)
+    assert t_st > 2.0 * t_rn
+    assert t_st < t_sq
+
+
+def test_strided_requires_stride():
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad", "read", "strided", 8192)    # stride_bytes=0
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad", "read", "seq", 8192, stride_bytes=-1)
+
+
 def test_burst_duty_cycle_gates_activity():
     wl = get_workload("dlio_bert")
     assert wl.active(0.1)
