@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   table7    h5bench HPC kernels (paper Table VII)
   table8    per-client overheads (paper Table VIII)
   ablation  tuner strategy ablation (paper §III-D, quantified)
+  ablation_tau  tau sweep measuring the GBDT calibration gap
   roofline  per-(arch x shape x mesh) dry-run roofline terms (§Roofline)
 
 Run a subset with ``python -m benchmarks.run --only fig6,table8``.
@@ -44,6 +45,7 @@ SECTIONS = [
     ("table7", bench_h5.run),
     ("table8", bench_overhead.run),
     ("ablation", bench_tuner_ablation.run),
+    ("ablation_tau", bench_tuner_ablation.run_tau_sweep),
     ("roofline", bench_roofline.run),
 ]
 

@@ -17,6 +17,9 @@ from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,
                                     cache_allocation, cache_allocation_many,
                                     trade_node_budgets)
 from repro.core.controller import CaratController, NodeCacheArbiter
+from repro.core.policies import (POLICIES, CaratPolicy, DialPolicy,
+                                 MagpieDrlPolicy, StaticPolicy, TuningPolicy,
+                                 make_policy, policy_from_config)
 from repro.core.fleet import FleetController, attach_fleet_to, build_fleet_tuner
 
 __all__ = [
@@ -26,5 +29,7 @@ __all__ = [
     "make_tuner", "cache_allocation", "cache_allocation_many",
     "CacheDemand", "CacheDemandBatch", "trade_node_budgets",
     "CaratController", "NodeCacheArbiter",
+    "TuningPolicy", "CaratPolicy", "StaticPolicy", "DialPolicy",
+    "MagpieDrlPolicy", "POLICIES", "make_policy", "policy_from_config",
     "FleetController", "attach_fleet_to", "build_fleet_tuner",
 ]

@@ -13,6 +13,13 @@ has faded.
 The controller is *decentralized*: it sees only its own client's counters.
 Cross-client coordination exists only within a node (the paper's stats
 collector, Fig 4 step 5), never across the cluster.
+
+Within the pluggable policy layer (``repro.core.policies``) this class is
+the per-client *state shell* that :class:`~repro.core.policies.CaratPolicy`
+hosts: ``observe()`` is the shared sampling/stage-machine path both the
+scalar loop and the batched fleet engine run (bit-identical by
+construction), ``actuate()`` applies a stage-1 decision produced either
+locally (``__call__``) or by the policy's batched ``decide_many``.
 """
 from __future__ import annotations
 

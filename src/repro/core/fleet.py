@@ -1,97 +1,43 @@
-"""Fleet tuning engine: batched Stage-1 + Stage-2 tuning across many clients.
+"""Back-compat hosts for the fleet tuning engine (now ``core/policies``).
 
-The paper deploys one CARAT controller per client; this module keeps that
-*decision semantics* while collapsing the per-probe compute. Each probe
-interval the fleet controller:
+The batched Stage-1 + Stage-2 engine that lived here moved to
+:class:`repro.core.policies.carat.CaratPolicy` — one implementation now
+serves both the policy API (``Simulation.attach_policy``) and the
+legacy fleet wiring. This module keeps the pre-policy surface working
+for one release:
 
-1. runs every member controller's ``observe`` (snapshot, stage machine,
-   stage-2 boundary marking) in client order — exactly the order the
-   per-client loop uses;
-2. gathers the pending ``(op, feature_vector)`` pairs into one batch and
-   scores the whole fleet's candidate space in a single vectorized
-   inference call (``_TunerBase.propose_many``, fed by the
-   ``GridGBDTScorer`` fast path in ``kernels/gbdt_infer``);
-3. applies each client's selected configuration via ``actuate``;
-4. drains every node arbiter with a pending stage-2 boundary into one
-   vectorized ``cache_allocation_many`` call over the whole fleet's
-   ``(nodes, clients)`` demand tensor (Algorithm 2, batched), optionally
-   rebalancing node budgets first (``budget_trading``).
+* :class:`FleetController` — a thin host over :class:`CaratPolicy`
+  taking the historical ``(controllers, models, ...)`` constructor;
+  every attribute, accounting property, and the ``(clients, t, dt)``
+  call signature are inherited unchanged, so existing deployments (and
+  the ``bench_fleet_scale`` / ``bench_cache_fleet`` / ``bench_replay``
+  identity gates) behave identically.
+* :func:`attach_fleet_to` — builds the per-client shells + per-node
+  deferred arbiters (now via ``policies.carat.wire_controllers``) and
+  attaches the host through the unified policy path.
+* :func:`build_fleet_tuner` — re-exported from ``policies.carat``.
 
-Stage-1 decisions are bit-identical to attaching the same controllers
-individually: inference is batch-invariant, Algorithm 1's tau-filter +
-conditional score is applied as a vectorized masked argmax with the same
-elementwise arithmetic, and exploration draws stay on each client's own
-RNG stream (``benchmarks/bench_fleet_scale.py`` gates this). Stage-2
-allocations are decision-identical per node to the scalar
-``cache_allocation`` path (``benchmarks/bench_cache_fleet.py`` gates
-that, plus the per-boundary arbiter cost drop).
+New code should construct policies instead::
 
-Node topology: every distinct :class:`NodeCacheArbiter` among the member
-controllers is one node. :func:`attach_fleet_to` builds that wiring from
-an explicit client -> node map (or ``sim.topology``), so multi-node
-deployments are first-class rather than the old binary
-shared-arbiter-or-private choice.
+    sim.attach_policy(make_policy("carat", spaces=spaces, models=models))
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Mapping, Optional, Sequence, Union
-
-import numpy as np
+from typing import Dict, Optional, Sequence
 
 from repro.config.types import CaratConfig
-from repro.core.cache_tuner import (CacheDemandBatch, cache_allocation,
-                                    cache_allocation_many,
-                                    trade_node_budgets)
-from repro.core.controller import CaratController, NodeCacheArbiter
-from repro.core.ml.gbdt import ObliviousGBDT
+from repro.core.controller import CaratController
+from repro.core.policies.carat import (CaratPolicy, NodeBudgets,
+                                       build_fleet_tuner, wire_controllers)
 from repro.core.policy import CaratSpaces
-from repro.core.rpc_tuner import _TunerBase, make_tuner
-from repro.storage.client import IOClient
-from repro.utils.rng import RngStream
+
+__all__ = ["FleetController", "attach_fleet_to", "build_fleet_tuner"]
 
 
-def _as_prob_fn(model) -> object:
-    return model.predict_proba if hasattr(model, "predict_proba") else model
-
-
-def build_fleet_tuner(
-    cfg: CaratConfig,
-    spaces: CaratSpaces,
-    models: Dict[str, object],
-    backend: str = "auto",
-    rng: Optional[RngStream] = None,
-) -> _TunerBase:
-    """One shared batched tuner for a whole fleet.
-
-    ``models`` maps op -> either an :class:`ObliviousGBDT` (gets the
-    factorized grid fast path, backend-selected by batch size) or any
-    ``predict_proba``-style callable (scored via the generic cross-product
-    fallback — still one call per op direction).
-    """
-    # deferred: kernels/gbdt_infer imports repro.core.ml.gbdt, which would
-    # re-enter this package's __init__ while it is still initializing
-    from repro.kernels.gbdt_infer.ops import GridGBDTScorer
-
-    theta = spaces.theta_features()
-    grid: Dict[str, GridGBDTScorer] = {}
-    probs: Dict[str, object] = {}
-    for op, m in models.items():
-        probs[op] = _as_prob_fn(m)
-        if isinstance(m, ObliviousGBDT):
-            grid[op] = GridGBDTScorer(m, theta, backend=backend)
-    return make_tuner(cfg.tuner, spaces, probs, tau=cfg.prob_tau,
-                      alpha=cfg.alpha, beta=cfg.beta, epsilon=cfg.epsilon,
-                      rng=rng or RngStream(0, "fleet"), grid_models=grid)
-
-
-class FleetController:
-    """Drives many :class:`CaratController` shells with one batched tuner.
-
-    Attach to a :class:`~repro.storage.sim.Simulation` via
-    ``sim.attach_fleet(fleet)``; the simulation invokes it once per step
-    with all clients, instead of once per client.
-    """
+class FleetController(CaratPolicy):
+    """Deprecated host: :class:`CaratPolicy` behind the historical
+    prebuilt-controllers constructor. Kept for one release; use
+    ``make_policy("carat", ...)`` + ``Simulation.attach_policy``."""
 
     def __init__(
         self,
@@ -103,168 +49,10 @@ class FleetController:
         budget_trading: bool = False,
         log_stage2: bool = False,
     ):
-        if not controllers:
-            raise ValueError("fleet needs at least one controller")
-        if stage2 not in ("batched", "scalar"):
-            raise ValueError(f"stage2 must be 'batched' or 'scalar', "
-                             f"got {stage2!r}")
-        self.controllers = list(controllers)
-        self.cfg = cfg or self.controllers[0].cfg
-        self.spaces = self.controllers[0].spaces
-        # One tuner serves every shell, so heterogeneous per-shell settings
-        # would be silently overridden — reject them up front.
-        for c in self.controllers:
-            if c.cfg != self.cfg or c.spaces != self.spaces:
-                raise ValueError(
-                    f"client {c.client_id}: fleet members must share one "
-                    f"CaratConfig and CaratSpaces (fleet uses a single "
-                    f"batched tuner); run heterogeneous clients per-client "
-                    f"or in separate fleets")
-        self.tuner = build_fleet_tuner(self.cfg, self.spaces, models,
-                                       backend=backend)
-        # stage-2 drain mode: "batched" = one cache_allocation_many over
-        # every pending node; "scalar" = per-node cache_allocation with the
-        # same drain timing (the benchmark baseline)
-        self.stage2 = stage2
-        self.budget_trading = budget_trading
-        # when logging, each drain appends (demand_lists, budgets,
-        # effective_budgets) for offline identity/timing replay
-        self.stage2_events: Optional[List[tuple]] = [] if log_stage2 else None
-        # fleet-level accounting
-        self.batch_time_total = 0.0
-        self.batch_count = 0
-        self.decision_count = 0
-        self.arbiter_time_total = 0.0
-        self.arbiter_batch_count = 0
-        self.node_retune_count = 0
-        self.boundary_count = 0     # client-level stage-2 boundary events
-
-    # ------------------------------------------------------------- sim hook
-    def __call__(self, clients: Sequence[IOClient], t: float,
-                 dt: float) -> None:
-        # resolve by client id, not list position — fleets over reordered
-        # or non-dense client id sets must not tune the wrong client
-        by_id = {c.client_id: c for c in clients}
-        pending: List[tuple] = []
-        for ctrl in self.controllers:
-            client = by_id.get(ctrl.client_id)
-            if client is None:
-                raise KeyError(f"fleet member {ctrl.client_id} has no "
-                               f"matching client (got ids "
-                               f"{sorted(by_id)})")
-            req = ctrl.observe(client, t, dt)
-            if req is not None:
-                pending.append((ctrl, req[0], req[1]))
-        if pending:
-            ops = [op for _, op, _ in pending]
-            feats = np.stack([f for _, _, f in pending])
-            rngs = [c.tuner.rng for c, _, _ in pending]
-            t0 = time.perf_counter()
-            proposals = self.tuner.propose_many(ops, feats, rngs=rngs)
-            elapsed = time.perf_counter() - t0
-            self.batch_time_total += elapsed
-            self.batch_count += 1
-            self.decision_count += len(pending)
-            share = elapsed / len(pending)
-            for (ctrl, op, _), proposal in zip(pending, proposals):
-                ctrl.actuate(op, proposal, t, share)
-        self._drain_stage2()
-
-    # ------------------------------------------------------- stage-2 drain
-    def _pending_arbiters(self) -> List[NodeCacheArbiter]:
-        arbs: List[NodeCacheArbiter] = []
-        seen = set()
-        for ctrl in self.controllers:
-            a = ctrl.arbiter
-            if a is not None and a.pending and id(a) not in seen:
-                seen.add(id(a))
-                arbs.append(a)
-        return arbs
-
-    def _drain_stage2(self) -> None:
-        """Arbitrate every node with a pending stage-2 boundary: one
-        vectorized Algorithm 2 call across all of them (or the per-node
-        scalar loop in ``stage2="scalar"`` mode)."""
-        arbs = self._pending_arbiters()
-        if not arbs:
-            return
-        crossings = [a.crossings for a in arbs]
-        # log payload must snapshot demands BEFORE apply resets the factors
-        logged = ([a.collect() for a in arbs]
-                  if self.stage2_events is not None else None)
-        budgets = np.array([a.budget() for a in arbs], dtype=np.float64)
-        t0 = time.perf_counter()
-        if self.stage2 == "batched":
-            batch = CacheDemandBatch.from_rows(
-                [a.collect_rows() for a in arbs], budgets)
-            effective = (trade_node_budgets(batch, self.spaces)
-                         if self.budget_trading else batch.node_budgets_mb)
-            rows = cache_allocation_many(batch, self.spaces,
-                                         effective).tolist()
-            elapsed = time.perf_counter() - t0
-            for a, row in zip(arbs, rows):
-                a.apply_slots(row)
-        else:
-            demands = [a.collect() for a in arbs]
-            if self.budget_trading:
-                effective = trade_node_budgets(
-                    CacheDemandBatch.pack(demands, budgets), self.spaces)
-            else:
-                effective = budgets
-            allocs = [cache_allocation(d, self.spaces, float(b))
-                      for d, b in zip(demands, effective)]
-            elapsed = time.perf_counter() - t0
-            for a, alloc in zip(arbs, allocs):
-                a.apply(alloc)
-        self.arbiter_time_total += elapsed
-        self.arbiter_batch_count += 1
-        self.node_retune_count += len(arbs)
-        self.boundary_count += sum(crossings)
-        if self.stage2_events is not None:
-            self.stage2_events.append(
-                (logged, budgets, np.array(effective, dtype=np.float64),
-                 crossings))
-
-    # ----------------------------------------------------------- accounting
-    @property
-    def mean_decision_s(self) -> float:
-        """Mean tuner cost per client decision (the fleet-scale metric)."""
-        return self.batch_time_total / max(self.decision_count, 1)
-
-    @property
-    def mean_node_retune_s(self) -> float:
-        """Mean arbiter cost per node stage-2 boundary."""
-        return self.arbiter_time_total / max(self.node_retune_count, 1)
-
-    @property
-    def decisions(self) -> List[List[tuple]]:
-        return [c.decisions for c in self.controllers]
-
-    def overheads(self) -> Dict[str, float]:
-        snap_ms = float(np.mean([c.builder.mean_snapshot_time_s
-                                 for c in self.controllers])) * 1e3
-        return {
-            "snapshot_ms": snap_ms,
-            "inference_ms": self.tuner.mean_inference_s * 1e3,
-            "decision_ms": self.mean_decision_s * 1e3,
-            "batch_ms": (self.batch_time_total
-                         / max(self.batch_count, 1)) * 1e3,
-            "stage2_node_ms": self.mean_node_retune_s * 1e3,
-        }
-
-
-NodeBudgets = Union[float, Mapping[object, float], None]
-
-
-def _node_budget(node_budgets_mb: NodeBudgets, node: object) -> Optional[float]:
-    if node_budgets_mb is None:
-        return None
-    if isinstance(node_budgets_mb, (int, float)):
-        return float(node_budgets_mb)
-    try:
-        return float(node_budgets_mb[node])
-    except KeyError:
-        raise ValueError(f"node_budgets_mb has no budget for node {node!r}")
+        super().__init__(
+            models=models, cfg=cfg, controllers=controllers,
+            backend=backend, stage2=stage2, budget_trading=budget_trading,
+            log_stage2=log_stage2)
 
 
 def attach_fleet_to(
@@ -298,40 +86,11 @@ def attach_fleet_to(
     All arbiters are fleet-drained (deferred), so each node arbitrates at
     most once per step even if several members cross a boundary together.
     """
-    cfg = cfg or CaratConfig()
-    if topology is None:
-        topology = getattr(sim, "topology", None)
-    if topology is not None:
-        if shared_node_arbiter or node_budget_mb is not None:
-            raise ValueError("topology replaces shared_node_arbiter/"
-                             "node_budget_mb; pass node_budgets_mb instead")
-        topology = list(topology)
-        if len(topology) != len(sim.clients):
-            raise ValueError(f"topology maps {len(topology)} clients but "
-                             f"the simulation has {len(sim.clients)}")
-    else:
-        if node_budget_mb is not None and not shared_node_arbiter:
-            # per-client arbiters would each get the full budget, silently
-            # multiplying the intended node cap by the client count
-            raise ValueError("node_budget_mb requires shared_node_arbiter="
-                             "True (or pass a topology)")
-        if shared_node_arbiter:
-            topology = [0] * len(sim.clients)
-            if node_budget_mb is not None:
-                if node_budgets_mb is not None:
-                    raise ValueError("pass node_budget_mb or node_budgets_mb,"
-                                     " not both")
-                node_budgets_mb = {0: node_budget_mb}
-        else:
-            topology = list(range(len(sim.clients)))
-    arbiters: Dict[object, NodeCacheArbiter] = {}
-    for node in topology:
-        if node not in arbiters:
-            arbiters[node] = NodeCacheArbiter(
-                spaces, _node_budget(node_budgets_mb, node), deferred=True)
-    ctrls = [CaratController(c.client_id, spaces, models, cfg,
-                             arbiter=arbiters[node])
-             for c, node in zip(sim.clients, topology)]
+    ctrls = wire_controllers(
+        sim, spaces, models, cfg,
+        shared_node_arbiter=shared_node_arbiter,
+        node_budget_mb=node_budget_mb,
+        topology=topology, node_budgets_mb=node_budgets_mb)
     fleet = FleetController(ctrls, models, backend=backend, cfg=cfg,
                             stage2=stage2, budget_trading=budget_trading,
                             log_stage2=log_stage2)

@@ -23,10 +23,14 @@ class CaratSpaces:
     default_dirty_mb: int = 2048
 
     def __post_init__(self):
-        for grid in (self.rpc_window_pages, self.rpcs_in_flight,
-                     self.dirty_cache_mb):
-            if not grid or list(grid) != sorted(set(grid)):
-                raise ValueError("grids must be sorted, unique, non-empty")
+        for name, grid in (("rpc_window_pages", self.rpc_window_pages),
+                           ("rpcs_in_flight", self.rpcs_in_flight),
+                           ("dirty_cache_mb", self.dirty_cache_mb)):
+            if not grid:
+                raise ValueError(f"{name} grid must be non-empty")
+            if list(grid) != sorted(set(grid)):
+                raise ValueError(f"{name} grid must be sorted and unique, "
+                                 f"got {tuple(grid)}")
 
     # --- RPC candidate space -------------------------------------------------
     def rpc_candidates(self) -> List[Tuple[int, int]]:

@@ -1,10 +1,21 @@
-"""Simulation driver: clients + cluster + (optionally) CARAT controllers.
+"""Simulation driver: clients + cluster + pluggable tuning policies.
 
-Advances the modeled deployment in probe-interval steps. Controllers are
-attached per client (decentralized, exactly as the paper deploys CARAT) and
-are invoked after counters update, mirroring the probe -> snapshot -> tune
-loop of Fig 4. The driver itself never inspects global state on behalf of a
-controller — controllers only see their own client's counters.
+Advances the modeled deployment in probe-interval steps. Tuners attach
+through one entry point, :meth:`Simulation.attach_policy`: anything with
+the :class:`repro.core.policies.TuningPolicy` lifecycle (``bind`` once,
+then ``step(clients, t, dt)`` each interval). ``phase="workload"``
+policies run *before* planning (trace replay swapping what clients do);
+``phase="tune"`` policies (the default) run after counters update,
+mirroring the probe -> snapshot -> tune loop of Fig 4. The driver
+itself never inspects global state on behalf of a policy — what a
+policy observes is its own contract (CARAT/DIAL read only their own
+client's counters; a Magpie-style centralized actor reads them all).
+
+The three pre-policy hooks — ``attach_controller`` (per-client
+callback), ``attach_fleet`` (batched callback), ``attach_schedule``
+(workload replay) — are kept as thin shims for one release; internally
+each is hosted by a policy on the same step path, so old-style wiring
+produces identical decisions (regression-tested).
 """
 from __future__ import annotations
 
@@ -21,9 +32,9 @@ from repro.utils.rng import RngStream
 # set_cache_limit on its own client only.
 Controller = Callable[[IOClient, float, float], None]
 
-# fleet callback: (clients, t, dt) -> None; invoked once per step with every
-# client, so a fleet engine can batch its per-client tuning into one
-# vectorized call (repro.core.fleet.FleetController). Each member controller
+# fleet/policy callback: (clients, t, dt) -> None; invoked once per step with
+# every client, so a fleet engine can batch its per-client tuning into one
+# vectorized call (repro.core.policies.CaratPolicy). Each member controller
 # still only reads its own client's counters — the batching is compute
 # shape, not extra observability.
 FleetHook = Callable[[Sequence[IOClient], float, float], None]
@@ -32,6 +43,79 @@ FleetHook = Callable[[Sequence[IOClient], float, float], None]
 # canonical implementation is repro.storage.replay.WorkloadSchedule; kept
 # structural so sim never imports the replay layer).
 ScheduleLike = object
+
+# policy duck type: ``step(clients, t, dt)`` / ``__call__`` plus optional
+# ``bind(sim, client_ids)`` and ``phase`` — structural for the same reason
+# (the canonical ABC lives in repro.core.policies.base).
+PolicyLike = object
+
+
+class _ScheduleHost:
+    """Internal ``phase="workload"`` policy hosting the attached phase
+    schedules: consulted at the top of every step, so workload switches
+    land exactly on interval boundaries with carried state (dirty cache,
+    last_wait) deliberately preserved."""
+
+    phase = "workload"
+
+    def __init__(self):
+        self.schedules: Dict[int, "ScheduleLike"] = {}
+
+    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
+        if not self.schedules:
+            return
+        by_id = {c.client_id: c for c in clients}
+        # set_workload swaps only the demand descriptor, so carried state
+        # (dirty cache, last_wait, last_drain) survives the switch
+        for cid, sched in self.schedules.items():
+            client = by_id[cid]
+            spec = sched.spec_at(t)
+            if spec is not client.workload:
+                client.set_workload(spec)
+
+    __call__ = step
+
+
+class _ControllerHost:
+    """Internal policy hosting the legacy per-client controller
+    callbacks, preserving their attach-order invocation and by-id client
+    resolution (controllers over reordered or non-dense client id sets
+    must not tune the wrong client)."""
+
+    phase = "tune"
+
+    def __init__(self):
+        self.controllers: Dict[int, Controller] = {}
+
+    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
+        if not self.controllers:
+            return
+        by_id = {c.client_id: c for c in clients}
+        for cid, ctrl in self.controllers.items():
+            client = by_id.get(cid)
+            if client is None:
+                raise KeyError(f"controller bound to client {cid} has no "
+                               f"matching client (got ids {sorted(by_id)})")
+            ctrl(client, t, dt)
+
+    __call__ = step
+
+
+class _FleetHost:
+    """Internal policy hosting the legacy ``attach_fleet`` hooks; iterates
+    the public ``sim.fleets`` list live, so pre-policy code that mutates
+    it (``fleets.clear()`` between runs) still detaches fleets."""
+
+    phase = "tune"
+
+    def __init__(self):
+        self.fleets: List[FleetHook] = []
+
+    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
+        for fleet in self.fleets:
+            fleet(clients, t, dt)
+
+    __call__ = step
 
 
 @dataclass
@@ -103,13 +187,24 @@ class Simulation:
                 rng=self.rng.fork(f"client{cid}"),
                 stripe_offset=offset,
             ))
-        self.controllers: Dict[int, Controller] = {}
-        self.fleets: List[FleetHook] = []
-        # client id -> phase schedule (repro.storage.replay); consulted at
-        # the top of every step, so workload switches land exactly on
-        # interval boundaries with carried state (dirty cache, last_wait)
-        # deliberately preserved across the switch.
-        self.schedules: Dict[int, "ScheduleLike"] = {}
+        # Everything that drives clients is a policy on one of two step
+        # phases. The legacy hooks are hosted with their pre-policy
+        # ordering frozen: per-client controllers first, then every
+        # attach_fleet hook; policies attached via attach_policy run
+        # after both, in attach order.
+        self._schedule_host = _ScheduleHost()
+        self._controller_host = _ControllerHost()
+        self._fleet_host = _FleetHost()
+        self._workload_policies: List[PolicyLike] = [self._schedule_host]
+        self._tune_policies: List[PolicyLike] = [self._controller_host,
+                                                 self._fleet_host]
+        # back-compat views onto the hosts' state (live: mutating them
+        # attaches/detaches exactly as before the policy refactor)
+        self.controllers: Dict[int, Controller] = \
+            self._controller_host.controllers
+        self.schedules: Dict[int, "ScheduleLike"] = \
+            self._schedule_host.schedules
+        self.fleets: List[FleetHook] = self._fleet_host.fleets
         self.t = 0.0
 
     def client_by_id(self, client_id: int) -> IOClient:
@@ -119,19 +214,54 @@ class Simulation:
         raise KeyError(f"no client with id {client_id} (got "
                        f"{sorted(c.client_id for c in self.clients)})")
 
+    def attach_policy(self, policy: "PolicyLike",
+                      client_ids: Optional[Sequence[int]] = None
+                      ) -> "PolicyLike":
+        """The unified tuner attach point: bind ``policy`` to this
+        simulation and invoke it once per step.
+
+        ``policy`` is anything with the
+        :class:`repro.core.policies.TuningPolicy` lifecycle — at minimum
+        ``step(clients, t, dt)`` (or being callable with that
+        signature); ``bind(sim, client_ids)`` is called here if present,
+        and ``phase`` selects when the policy runs: ``"tune"``
+        (default) after counters update, ``"workload"`` before
+        planning. ``client_ids`` restricts the policy to a subset of
+        clients (None = all). Returns the policy for chaining.
+        """
+        phase = getattr(policy, "phase", "tune")
+        if phase not in ("workload", "tune"):
+            # validate before bind(): a rejected policy must not have
+            # already mutated the simulation's clients
+            raise ValueError(f"policy phase must be 'workload' or 'tune', "
+                             f"got {phase!r}")
+        bind = getattr(policy, "bind", None)
+        if bind is not None:
+            bind(self, client_ids)
+        if phase == "workload":
+            self._workload_policies.append(policy)
+        else:
+            self._tune_policies.append(policy)
+        return policy
+
+    # --- deprecated shims (kept for one release) ------------------------------
     def attach_controller(self, client_id: int, controller: Controller) -> None:
+        """Deprecated shim: per-client controller callback, hosted on the
+        policy path (use :meth:`attach_policy` for new code)."""
         self.client_by_id(client_id)     # fail fast on unknown ids
         self.controllers[client_id] = controller
 
     def attach_schedule(self, client_id: int, schedule: "ScheduleLike") -> None:
         """Drive a client's workload from a time-ordered phase schedule
-        (any object with ``spec_at(t) -> WorkloadSpec``)."""
+        (any object with ``spec_at(t) -> WorkloadSpec``). Deprecated
+        shim, hosted on the ``phase="workload"`` policy path."""
         self.client_by_id(client_id)
         self.schedules[client_id] = schedule
 
     def attach_fleet(self, fleet: FleetHook) -> None:
-        """Attach a fleet controller invoked once per step with all clients
-        (batched stage-1 tuning), after any per-client controllers."""
+        """Deprecated shim: attach a fleet controller invoked once per
+        step with all clients, after any per-client controllers (use
+        :meth:`attach_policy` for new code — policies are fleet hooks)."""
         self.fleets.append(fleet)
 
     def node_clients(self) -> Dict[object, List[int]]:
@@ -147,33 +277,22 @@ class Simulation:
 
     def step(self) -> None:
         dt = self.interval_s
-        by_id = {c.client_id: c for c in self.clients}
-        # replayed phase schedules switch workloads at interval boundaries;
-        # set_workload swaps only the demand descriptor, so carried state
-        # (dirty cache, last_wait, last_drain) survives the switch
-        for cid, sched in self.schedules.items():
-            client = by_id[cid]
-            spec = sched.spec_at(self.t)
-            if spec is not client.workload:
-                client.set_workload(spec)
+        # workload-phase policies first: replayed schedules switch what the
+        # clients do *before* this interval is planned
+        for policy in self._workload_policies:
+            policy(self.clients, self.t, dt)
         plans = [c.plan(self.t, dt, self.p.n_osts) for c in self.clients]
         demands = [d for pl in plans for d in pl.all_demands()]
         fb = self.cluster.resolve(demands, dt)
         for client, plan in zip(self.clients, plans):
             client.commit(plan, fb.scale, fb.waits, dt)
         self.t += dt
-        # controllers run after counters update (probe -> tune, Fig 4);
-        # resolved by client id, not list position — controllers over
-        # reordered or non-dense client id sets must not tune the wrong
-        # client (same bug class FleetController fixed in PR 2)
-        for cid, ctrl in self.controllers.items():
-            client = by_id.get(cid)
-            if client is None:
-                raise KeyError(f"controller bound to client {cid} has no "
-                               f"matching client (got ids {sorted(by_id)})")
-            ctrl(client, self.t, dt)
-        for fleet in self.fleets:
-            fleet(self.clients, self.t, dt)
+        # tune-phase policies run after counters update (probe -> tune,
+        # Fig 4): legacy per-client controllers, then legacy fleets (both
+        # hosted, keeping the pre-policy order), then attach_policy
+        # policies in attach order
+        for policy in self._tune_policies:
+            policy(self.clients, self.t, dt)
 
     def run(self, duration_s: float) -> SimResult:
         n_steps = int(round(duration_s / self.interval_s))
