@@ -36,10 +36,9 @@ import numpy as np  # noqa: E402
 
 from common import carat_models, emit  # noqa: E402
 
-from repro.core import default_spaces  # noqa: E402
+from repro.core import CaratPolicy, default_spaces  # noqa: E402
 from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,  # noqa: E402
                                     cache_allocation, cache_allocation_many)
-from repro.core.fleet import attach_fleet_to  # noqa: E402
 from repro.storage import Simulation, get_workload  # noqa: E402
 
 SPACES = default_spaces()
@@ -56,9 +55,9 @@ def build(n_nodes, clients_per_node, seed, stage2, budget_frac=0.35,
     if budgets is None:
         budgets = float(SPACES.cache_max * clients_per_node * budget_frac)
     sim = Simulation(wls, seed=seed, topology=topology)
-    fleet = attach_fleet_to(sim, SPACES, carat_models(), backend="numpy",
-                            node_budgets_mb=budgets, stage2=stage2,
-                            budget_trading=trading, log_stage2=log)
+    fleet = sim.attach_policy(CaratPolicy(
+        SPACES, carat_models(), backend="numpy", node_budgets_mb=budgets,
+        stage2=stage2, budget_trading=trading, log_stage2=log))
     return sim, fleet
 
 

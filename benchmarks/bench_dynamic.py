@@ -13,7 +13,8 @@ import numpy as np
 
 from benchmarks.common import carat_models, emit, optimal_config, timed
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core import (CaratController, NodeCacheArbiter, PerClientPolicy,
+                        default_spaces)
 from repro.storage.client import ClientConfig
 from repro.storage.sim import Simulation
 from repro.storage.workloads import get_workload
@@ -34,7 +35,7 @@ def _run_sequence(names: Sequence[str], segment_s: float, carat: bool,
         ctrl = CaratController(0, default_spaces(), carat_models(),
                                CaratConfig(),
                                arbiter=NodeCacheArbiter(default_spaces()))
-        sim.attach_controller(0, ctrl)
+        sim.attach_policy(PerClientPolicy({0: ctrl}))
     out = []
     for name in names:
         sim.clients[0].set_workload(get_workload(name))

@@ -2,8 +2,9 @@
 
 For each fleet size n the same simulation (same workload mix, same seed,
 same controller shells) runs twice: once with n independent per-client
-``CaratController`` callbacks, once with one ``FleetController`` batching
-every probe's stage-1 tuning into a single vectorized inference call.
+``CaratController`` callbacks (hosted by ``PerClientPolicy``), once with
+one ``CaratPolicy`` batching every probe's stage-1 tuning into a single
+vectorized inference call.
 
 Reported per size:
 
@@ -30,8 +31,8 @@ sys.path.insert(0, "benchmarks")
 from common import carat_models, emit  # noqa: E402
 
 from repro.config.types import CaratConfig  # noqa: E402
-from repro.core import (CaratController, FleetController,  # noqa: E402
-                        NodeCacheArbiter, default_spaces)
+from repro.core import (CaratController, CaratPolicy,  # noqa: E402
+                        NodeCacheArbiter, PerClientPolicy, default_spaces)
 from repro.core.ml.train import get_default_models  # noqa: E402
 from repro.storage import Simulation, get_workload  # noqa: E402
 
@@ -58,8 +59,7 @@ def run_pair(n, duration_s, seed=0, tuner="conditional_score",
 
     sim_a = Simulation(_workloads(n), seed=seed)
     percl = _controllers(n, spaces, carat_models(), cfg)
-    for i, c in enumerate(percl):
-        sim_a.attach_controller(i, c)
+    sim_a.attach_policy(PerClientPolicy({c.client_id: c for c in percl}))
     sim_a.run(duration_s)
     n_dec = sum(c.tuner.tune_count for c in percl)
     us_percl = (sum(c.tuner.tune_time_total for c in percl)
@@ -67,8 +67,9 @@ def run_pair(n, duration_s, seed=0, tuner="conditional_score",
 
     sim_b = Simulation(_workloads(n), seed=seed)
     shells = _controllers(n, spaces, carat_models(), cfg)
-    fleet = FleetController(shells, gbdts, backend=backend, cfg=cfg)
-    sim_b.attach_fleet(fleet)
+    fleet = CaratPolicy(models=gbdts, controllers=shells, backend=backend,
+                        cfg=cfg)
+    sim_b.attach_policy(fleet)
     sim_b.run(duration_s)
     us_fleet = fleet.mean_decision_s * 1e6
 

@@ -13,7 +13,8 @@ import numpy as np
 
 from benchmarks.common import carat_models, emit
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core import (CaratController, NodeCacheArbiter, PerClientPolicy,
+                        default_spaces)
 from repro.kernels.gbdt_infer.ops import PallasGBDTScorer
 from repro.storage.client import ClientConfig
 from repro.storage.sim import Simulation
@@ -27,7 +28,7 @@ def run(duration_s: float = 30.0) -> None:
         ctrl = CaratController(0, default_spaces(), carat_models(),
                                CaratConfig(),
                                arbiter=NodeCacheArbiter(default_spaces()))
-        sim.attach_controller(0, ctrl)
+        sim.attach_policy(PerClientPolicy({0: ctrl}))
         sim.run(duration_s)
         ov = ctrl.overheads()
         emit(f"table8/{op}/snapshot_ms", ov["snapshot_ms"] * 1e3,

@@ -39,8 +39,8 @@ import numpy as np  # noqa: E402
 from common import carat_models, emit  # noqa: E402
 
 from repro.config.types import CaratConfig  # noqa: E402
-from repro.core import CaratController, NodeCacheArbiter, default_spaces  # noqa: E402
-from repro.core.fleet import attach_fleet_to  # noqa: E402
+from repro.core import (CaratController, CaratPolicy,  # noqa: E402
+                        NodeCacheArbiter, PerClientPolicy, default_spaces)
 from repro.storage import (ClientConfig, bundled_traces, compile_trace,  # noqa: E402
                            load_bundled_trace, parse_trace, render_trace,
                            simulation_from_schedules, synthesize_trace)
@@ -97,13 +97,13 @@ def decision_identity(seed=3):
     for cid in sorted(schedules):
         ctrl = CaratController(cid, SPACES, carat_models(), cfg,
                                arbiter=NodeCacheArbiter(SPACES))
-        sim_a.attach_controller(cid, ctrl)
         percl.append(ctrl)
+    sim_a.attach_policy(PerClientPolicy({c.client_id: c for c in percl}))
     res_a = sim_a.run(duration)
 
     sim_b = simulation_from_schedules(schedules, seed=seed)
-    fleet = attach_fleet_to(sim_b, SPACES, carat_models(), cfg=cfg,
-                            backend="numpy")
+    fleet = sim_b.attach_policy(CaratPolicy(SPACES, carat_models(), cfg=cfg,
+                                            backend="numpy"))
     res_b = sim_b.run(duration)
 
     identical = all(a.decisions == b.decisions
@@ -142,7 +142,8 @@ def adaptivity(seed=7, interval_s=0.5):
 
     sim = simulation_from_schedules(schedules, seed=seed,
                                     interval_s=interval_s)
-    fleet = attach_fleet_to(sim, SPACES, carat_models(), backend="numpy")
+    fleet = sim.attach_policy(CaratPolicy(SPACES, carat_models(),
+                                          backend="numpy"))
     res_c = sim.run(duration)
 
     def phase_thr(res, i0, i1):

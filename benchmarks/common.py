@@ -13,7 +13,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core import (CaratController, NodeCacheArbiter, PerClientPolicy,
+                        default_spaces)
 from repro.core.ml.train import get_default_models
 from repro.storage.client import ClientConfig
 from repro.storage.sim import Simulation
@@ -72,8 +73,11 @@ def run_scenario(
                 ctrl = CaratController(i, spaces, carat_models(),
                                        carat_cfg or CaratConfig(),
                                        arbiter=node_arb)
-                sim.attach_controller(i, ctrl)
                 controllers.append(ctrl)
+            # scalar per-client loop (the paper's deployment shape); the
+            # batched fleet engine is CaratPolicy, gated identical
+            sim.attach_policy(PerClientPolicy(
+                {c.client_id: c for c in controllers}))
         res = sim.run(duration_s)
         for i in range(n):
             per_client[si, i] = res.client_mean_throughput(i)

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   ablation  tuner strategy ablation (paper §III-D, quantified)
   ablation_tau  tau sweep measuring the GBDT calibration gap
   roofline  per-(arch x shape x mesh) dry-run roofline terms (§Roofline)
+  sharded   sharded runtime gates (sync identity + async stragglers)
 
 Run a subset with ``python -m benchmarks.run --only fig6,table8``.
 """
@@ -33,6 +34,7 @@ from benchmarks import (
     bench_overhead,
     bench_tuner_ablation,
     bench_roofline,
+    bench_sharded,
 )
 
 SECTIONS = [
@@ -47,6 +49,7 @@ SECTIONS = [
     ("ablation", bench_tuner_ablation.run),
     ("ablation_tau", bench_tuner_ablation.run_tau_sweep),
     ("roofline", bench_roofline.run),
+    ("sharded", bench_sharded.run),
 ]
 
 

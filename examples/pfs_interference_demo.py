@@ -9,7 +9,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core import (CaratController, NodeCacheArbiter, PerClientPolicy,
+                        default_spaces)
 from repro.core.ml.train import get_default_models
 from repro.storage import Simulation, get_workload
 from repro.storage.client import ClientConfig
@@ -27,10 +28,10 @@ def run(carat: bool) -> float:
         m_r, m_w = get_default_models()
         models = {"read": m_r, "write": m_w}
         spaces = default_spaces()
-        for i in range(len(wls)):
-            sim.attach_controller(i, CaratController(
-                i, spaces, models, CaratConfig(),
-                arbiter=NodeCacheArbiter(spaces)))
+        sim.attach_policy(PerClientPolicy({
+            i: CaratController(i, spaces, models, CaratConfig(),
+                               arbiter=NodeCacheArbiter(spaces))
+            for i in range(len(wls))}))
     res = sim.run(30.0)
     for i, name in enumerate(WORKLOADS):
         print(f"    client {i} ({name:12s}): "

@@ -6,8 +6,8 @@ prints the decisions CARAT made — the paper's core loop in ~40 lines.
 
 Part 2 scales the same loop to a 16-client fleet with the batched fleet
 engine: one vectorized inference call per probe interval scores every
-client's whole candidate space at once (``repro.core.fleet``), with
-decisions bit-identical to the per-client loop. The scoring backend is
+client's whole candidate space at once (``repro.core.policies.carat``),
+with decisions bit-identical to the per-client loop. The scoring backend is
 chosen per call by ``kernels/gbdt_infer`` ("auto": factorized numpy on
 CPU hosts, the Pallas kernel on TPU hosts once the batch fills a block).
 
@@ -33,6 +33,15 @@ DIAL-style decentralized learned clients, and a Magpie-style
 centralized DRL actor are compared on the same replayed trace
 (``benchmarks/bench_baselines.py`` runs the full corpus head-to-head).
 
+Part 6 shards the deployment: a ``ShardedRuntime``
+(``repro.core.runtime``) partitions the clients into node-group shards,
+each advancing its own plan -> resolve -> commit loop, with tuning
+traffic crossing shards only over an observation/decision bus. Sync
+mode is decision-identical to the single-process run (gated by
+``benchmarks/bench_sharded.py``); flipping to async mode frees every
+shard to run its own probe cadence — an injected 10x-slow straggler
+shard no longer drags the healthy shards' cadence down.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -40,8 +49,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
-from repro.core.fleet import attach_fleet_to
+from repro.core import (CaratController, CaratPolicy, NodeCacheArbiter,
+                        PerClientPolicy, default_spaces)
 from repro.core.ml.train import get_default_models
 from repro.storage import Simulation, get_workload
 from repro.storage.client import ClientConfig
@@ -61,7 +70,7 @@ def main():
     sim = Simulation([wl], configs=[ClientConfig()], seed=7)
     ctrl = CaratController(0, spaces, models, CaratConfig(),
                            arbiter=NodeCacheArbiter(spaces))
-    sim.attach_controller(0, ctrl)
+    sim.attach_policy(PerClientPolicy({0: ctrl}))
     res = sim.run(30.0)
     tuned = res.client_mean_throughput(0)
     print(f"CARAT (online co-tuning):           {tuned/1e6:7.1f} MB/s "
@@ -78,10 +87,10 @@ def main():
     print("\n== fleet engine: 16 clients, one batched tuner ==")
     names = ["s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_1m", "s_wr_rn_8k"] * 4
     fleet_sim = Simulation([get_workload(n) for n in names], seed=7)
-    # attach_fleet_to builds one controller shell per client (stage machine,
-    # stage-2 arbiter) and drives all of them from a single batched tuner;
-    # backend="auto" picks numpy/jnp/pallas per call from platform + batch
-    fleet = attach_fleet_to(fleet_sim, spaces, models)
+    # CaratPolicy builds one controller shell per client at bind (stage
+    # machine, stage-2 arbiter) and drives all of them from a single batched
+    # tuner; backend="auto" picks numpy/jnp/pallas per platform + batch
+    fleet = fleet_sim.attach_policy(CaratPolicy(spaces, models))
     res = fleet_sim.run(20.0)
     ov = fleet.overheads()
     print(f"aggregate throughput: {res.aggregate_throughput/1e6:7.1f} MB/s")
@@ -95,17 +104,17 @@ def main():
     print("\n== multi-node stage-2: 4 nodes x 4 clients, budget trading ==")
     names = ["dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m"] * 4
     # client i lives on node i // 4; the topology can also be passed to
-    # attach_fleet_to directly instead of declaring it on the simulation
+    # CaratPolicy directly instead of declaring it on the simulation
     node_sim = Simulation([get_workload(n) for n in names], seed=7,
                           topology=[i // 4 for i in range(16)])
     # starve the odd nodes, oversize the even ones: trading moves the
     # surplus at each drain (never exceeding the summed node budgets)
     spaces_max = spaces.cache_max
-    fleet = attach_fleet_to(
-        node_sim, spaces, models,
+    fleet = node_sim.attach_policy(CaratPolicy(
+        spaces, models,
         node_budgets_mb={0: 6.0 * spaces_max, 1: 1.0 * spaces_max,
                          2: 6.0 * spaces_max, 3: 1.0 * spaces_max},
-        budget_trading=True)
+        budget_trading=True))
     res = node_sim.run(20.0)
     ov = fleet.overheads()
     print(f"aggregate throughput: {res.aggregate_throughput/1e6:7.1f} MB/s")
@@ -130,7 +139,7 @@ def main():
           f"{len(sched.phases)} phases "
           f"({len(sched.active_phases())} active + idle gaps)")
     replay_sim = simulation_from_schedules(schedules, seed=7)
-    fleet = attach_fleet_to(replay_sim, spaces, models)
+    fleet = replay_sim.attach_policy(CaratPolicy(spaces, models))
     res = replay_sim.run(sched.duration)
     print(f"aggregate throughput: {res.aggregate_throughput/1e6:7.1f} MB/s "
           f"over {sched.duration:.0f} s of replay")
@@ -164,6 +173,51 @@ def main():
     print("same simulator, same trace, same seed — the policy registry "
           "(repro.core.policies.POLICIES) is the only thing that changed;")
     print("full corpus head-to-head: benchmarks/bench_baselines.py")
+
+    # -- Part 6: sharded fleet runtime — sync identity, async stragglers ----
+    print("\n== sharded runtime: 4 node-group shards on the tuning bus ==")
+    from repro.core.runtime import ShardedRuntime
+    names = ["dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m"] * 4
+    topology = [i // 4 for i in range(16)]      # 4 nodes -> 4 shards
+
+    def build():
+        sim = Simulation([get_workload(n) for n in names], seed=7,
+                         topology=topology)
+        policy = sim.attach_policy(CaratPolicy(spaces, models,
+                                               backend="numpy"))
+        return sim, policy
+
+    # sync mode: barrier per probe interval, decision-identical to the
+    # single-process Simulation.run (bench_sharded.py gates this)
+    sim_sp, pol_sp = build()
+    res_sp = sim_sp.run(12.0)
+    sim_sh, pol_sh = build()
+    runtime = ShardedRuntime(sim_sh, mode="sync")
+    res_sh = runtime.run(12.0)
+    identical = (pol_sp.decisions == pol_sh.decisions
+                 and res_sp.app_read_bytes == res_sh.app_read_bytes)
+    print(f"sync mode over {len(runtime.shards)} shards: decision-identical "
+          f"to single-process = {identical}")
+
+    # async mode: each shard free-runs its own probe cadence; a 10x-slow
+    # straggler shard is ignored (bounded-staleness gather), not waited for
+    def cadence(straggler):
+        sim, _ = build()
+        rt = ShardedRuntime(sim, mode="async", max_staleness_intervals=2,
+                            straggler_delay_s=straggler)
+        rt.run(12.0)
+        healthy = [c for sid, c in rt.probe_cadence().items()
+                   if sid not in (straggler or {})]
+        return sum(healthy) / len(healthy), rt
+    plain, _ = cadence(None)
+    slowed, rt = cadence({0: 0.005})
+    print(f"async probe cadence (healthy shards): "
+          f"{plain*1e3:.2f} ms/interval -> {slowed*1e3:.2f} ms/interval "
+          f"with a straggler shard injected "
+          f"({slowed/max(plain, 1e-9):.2f}x; sync would serialize the "
+          f"straggler's delay into every interval)")
+    print(f"bus: {rt.bus.stats()} (stale straggler traffic is dropped, "
+          f"never waited for)")
 
 
 if __name__ == "__main__":

@@ -18,9 +18,10 @@ from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,
                                     trade_node_budgets)
 from repro.core.controller import CaratController, NodeCacheArbiter
 from repro.core.policies import (POLICIES, CaratPolicy, DialPolicy,
-                                 MagpieDrlPolicy, StaticPolicy, TuningPolicy,
-                                 make_policy, policy_from_config)
-from repro.core.fleet import FleetController, attach_fleet_to, build_fleet_tuner
+                                 MagpieDrlPolicy, PerClientPolicy,
+                                 StaticPolicy, TuningPolicy,
+                                 build_fleet_tuner, make_policy,
+                                 policy_from_config, wire_controllers)
 
 __all__ = [
     "CaratSpaces", "default_spaces", "Metrics", "compute_metrics",
@@ -30,6 +31,6 @@ __all__ = [
     "CacheDemand", "CacheDemandBatch", "trade_node_budgets",
     "CaratController", "NodeCacheArbiter",
     "TuningPolicy", "CaratPolicy", "StaticPolicy", "DialPolicy",
-    "MagpieDrlPolicy", "POLICIES", "make_policy", "policy_from_config",
-    "FleetController", "attach_fleet_to", "build_fleet_tuner",
+    "MagpieDrlPolicy", "PerClientPolicy", "POLICIES", "make_policy",
+    "policy_from_config", "build_fleet_tuner", "wire_controllers",
 ]

@@ -15,13 +15,14 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.policies.local import PerClientPolicy
 from repro.core.policy import CaratSpaces, default_spaces
 from repro.core.snapshot import SnapshotBuilder
 from repro.storage.client import ClientConfig, IOClient
 from repro.storage.params import PFSParams
 from repro.storage.replay import (WorkloadSchedule, schedule_from_names,
                                   simulation_from_schedules)
-from repro.storage.sim import Simulation
+from repro.storage.sim import SchedulePolicy, Simulation
 from repro.storage.workloads import get_workload, training_workloads
 from repro.utils.logging import get_logger
 from repro.utils.rng import RngStream
@@ -183,11 +184,11 @@ def collect_training_data(
                 n_gaps = len(rot) - 1
                 phase_s = max((duration_s - n_gaps * phase_gap_s)
                               / len(rot), 2 * interval_s)
-                sim.attach_schedule(0, schedule_from_names(
-                    rot, phase_s=phase_s, gap_s=phase_gap_s))
+                sim.attach_policy(SchedulePolicy({0: schedule_from_names(
+                    rot, phase_s=phase_s, gap_s=phase_gap_s)}))
             coll = _Collector(spaces, interval_s, improve_eps,
                               root.fork(f"{name}/{rep}"))
-            sim.attach_controller(0, coll)
+            sim.attach_policy(PerClientPolicy({0: coll}))
             sim.run(duration_s)
             for op in ("read", "write"):
                 rows[op].extend(coll.rows[op])
@@ -224,7 +225,7 @@ def collect_replayed_data(
         for cid in sorted(schedules):
             colls[cid] = _Collector(spaces, interval_s, improve_eps,
                                     root.fork(f"c{cid}/{rep}"))
-            sim.attach_controller(cid, colls[cid])
+        sim.attach_policy(PerClientPolicy(colls))
         sim.run(duration_s)
         for coll in colls.values():
             for op in ("read", "write"):

@@ -12,8 +12,7 @@ Registered policies (``benchmarks/bench_baselines.py`` runs them
 head-to-head over the bundled replay corpus):
 
 * ``carat``  — the paper's two-stage co-tuner (:class:`CaratPolicy`);
-  decision-identical to the pre-policy ``CaratController`` /
-  ``FleetController`` paths.
+  decision-identical to the scalar per-client ``CaratController`` loop.
 * ``static`` — one fixed config, never adapted (default / static-best).
 * ``dial``   — DIAL-style decentralized learned clients: per-client
   online neighbourhood bandits over locally observable metrics.
@@ -30,10 +29,11 @@ from __future__ import annotations
 
 from typing import Any, Mapping
 
-from repro.core.policies.base import TuningPolicy
+from repro.core.policies.base import TuningPolicy, resolve_bound_clients
 from repro.core.policies.carat import (CaratPolicy, build_fleet_tuner,
                                        wire_controllers)
 from repro.core.policies.dial import DialPolicy
+from repro.core.policies.local import PerClientPolicy
 from repro.core.policies.magpie import MagpieDrlPolicy, default_actions
 from repro.core.policies.static import StaticPolicy
 from repro.utils.registry import Registry
@@ -65,6 +65,7 @@ def policy_from_config(config: Mapping[str, Any]) -> TuningPolicy:
 
 __all__ = [
     "TuningPolicy", "CaratPolicy", "StaticPolicy", "DialPolicy",
-    "MagpieDrlPolicy", "POLICIES", "make_policy", "policy_from_config",
-    "build_fleet_tuner", "wire_controllers", "default_actions",
+    "MagpieDrlPolicy", "PerClientPolicy", "POLICIES", "make_policy",
+    "policy_from_config", "build_fleet_tuner", "wire_controllers",
+    "default_actions", "resolve_bound_clients",
 ]

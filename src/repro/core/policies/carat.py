@@ -1,9 +1,7 @@
 """CARAT as a :class:`TuningPolicy` — the paper's two-stage co-tuner.
 
-This module owns the fleet-scale decision engine that used to live in
-``repro.core.fleet.FleetController``; that class is now a thin
-back-compat host over :class:`CaratPolicy`. The decision semantics are
-unchanged and gated: per-client :class:`CaratController` shells run the
+This module owns the fleet-scale decision engine. The decision
+semantics are gated: per-client :class:`CaratController` shells run the
 shared ``observe()`` path (snapshot, stage machine, stage-2 boundary
 marking, phase re-probe) in member order, stage-1 proposals come from
 one vectorized ``propose_many`` per probe, and pending stage-2 node
@@ -19,8 +17,20 @@ Construction comes in two shapes:
   deferred stage-2 arbiter per node (from ``topology`` /
   ``sim.topology``, defaulting to a private node per client). This is
   the registry path (``make_policy("carat", ...)``).
-* ``CaratPolicy(models=..., controllers=[...])`` — host prebuilt shells
-  (the legacy ``FleetController`` constructor).
+* ``CaratPolicy(models=..., controllers=[...])`` — host prebuilt shells.
+
+Sharded execution: CARAT is ``gather = "fleet"`` — under a
+:class:`~repro.core.runtime.ShardedRuntime`, shards publish
+``(client_id, (op, feats))`` observation messages, the coordinator runs
+the one batched ``decide_many`` over the gathered batch (restored to
+member order, so sync mode stays decision-identical), and scatters
+``(client_id, (op, proposal, share))`` decisions back. The stage-2
+drain rides the request/reply round: shards publish pending node
+demand rows keyed by arbiter rank, the coordinator batches every
+gathered node into one ``cache_allocation_many`` call — with
+``budget_trading`` the :func:`trade_node_budgets` pass runs over that
+same gathered batch, which is how budget moves *across shards* — and
+shards apply the returned allocation rows.
 """
 from __future__ import annotations
 
@@ -30,12 +40,12 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.config.types import CaratConfig
-from repro.core.cache_tuner import (CacheDemandBatch, cache_allocation,
-                                    cache_allocation_many,
+from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,
+                                    cache_allocation, cache_allocation_many,
                                     trade_node_budgets)
 from repro.core.controller import CaratController, NodeCacheArbiter
 from repro.core.ml.gbdt import ObliviousGBDT
-from repro.core.policies.base import TuningPolicy
+from repro.core.policies.base import TuningPolicy, resolve_bound_clients
 from repro.core.policy import CaratSpaces
 from repro.core.rpc_tuner import _TunerBase, make_tuner
 from repro.storage.client import IOClient
@@ -101,8 +111,8 @@ def wire_controllers(
     client_ids: Optional[Sequence[int]] = None,
 ) -> List[CaratController]:
     """Build one controller shell per sim client and one deferred stage-2
-    arbiter per node — the shared wiring behind ``attach_fleet_to`` and
-    ``CaratPolicy.bind``. ``client_ids`` restricts the wiring to a subset
+    arbiter per node — the wiring behind ``CaratPolicy.bind`` (and usable
+    standalone). ``client_ids`` restricts the wiring to a subset
     of clients *before* arbiters are built, so excluded clients are never
     registered as (phantom) arbiter members.
 
@@ -165,6 +175,7 @@ class CaratPolicy(TuningPolicy):
     """
 
     name = "carat"
+    gather = "fleet"
 
     def __init__(
         self,
@@ -299,14 +310,12 @@ class CaratPolicy(TuningPolicy):
     def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
         # resolve by client id, not list position — fleets over reordered
         # or non-dense client id sets must not tune the wrong client
-        by_id = {c.client_id: c for c in clients}
+        # (loud, shared diagnostic shape, like every other attach path)
+        targets = resolve_bound_clients(
+            f"policy {self.name!r}",
+            [c.client_id for c in self.controllers], clients)
         pending: List[tuple] = []
-        for ctrl in self.controllers:
-            client = by_id.get(ctrl.client_id)
-            if client is None:
-                raise KeyError(f"fleet member {ctrl.client_id} has no "
-                               f"matching client (got ids "
-                               f"{sorted(by_id)})")
+        for ctrl, client in zip(self.controllers, targets):
             req = ctrl.observe(client, t, dt)
             if req is not None:
                 pending.append((ctrl, req[0], req[1]))
@@ -370,6 +379,151 @@ class CaratPolicy(TuningPolicy):
             self.stage2_events.append(
                 (logged, budgets, np.array(effective, dtype=np.float64),
                  crossings))
+
+    # ------------------------------------------------------ sharded/bus path
+    def _member_ranks(self) -> Dict[int, int]:
+        """client_id -> position in the fleet member order (the order the
+        single-process ``step`` batches observations in)."""
+        return {c.client_id: i for i, c in enumerate(self.controllers)}
+
+    def _ranked_arbiters(self) -> List[Tuple[int, NodeCacheArbiter]]:
+        """(rank, arbiter) per unique arbiter; rank = index of its first
+        member in the controller order — the order ``finish_step`` drains
+        pending nodes in, which keeps sync-sharded batches identical."""
+        out: List[Tuple[int, NodeCacheArbiter]] = []
+        seen = set()
+        for i, ctrl in enumerate(self.controllers):
+            a = ctrl.arbiter
+            if a is not None and id(a) not in seen:
+                seen.add(id(a))
+                out.append((i, a))
+        return out
+
+    def validate_shards(self, shard_of: Mapping[int, object]) -> None:
+        """Reject shard partitions that split a stage-2 node arbiter:
+        arbiters are node-local state, so all of a node's members must
+        land in one shard (``ShardedRuntime`` calls this at build)."""
+        for rank, arb in self._ranked_arbiters():
+            shards = {shard_of.get(m.client_id) for m in arb.members}
+            if len(shards) > 1:
+                raise ValueError(
+                    f"stage-2 arbiter over clients "
+                    f"{[m.client_id for m in arb.members]} spans shards "
+                    f"{sorted(map(str, shards))}; node groups must not be "
+                    f"split across shards")
+
+    def shard_observe(self, clients: Sequence[IOClient], t: float,
+                      dt: float) -> List[Tuple[int, tuple]]:
+        """Observe this shard's shells in member order; pending stage-1
+        requests become ``(client_id, (op, feats))`` messages."""
+        by_id = {c.client_id: c for c in clients}
+        out: List[Tuple[int, tuple]] = []
+        for ctrl in self.controllers:
+            client = by_id.get(ctrl.client_id)
+            if client is None:
+                continue                    # lives on another shard
+            req = ctrl.observe(client, t, dt)
+            if req is not None:
+                out.append((ctrl.client_id, (req[0], req[1])))
+        return out
+
+    def bus_decide(self, obs: Sequence[Tuple[int, tuple]],
+                   t: float) -> List[Tuple[int, tuple]]:
+        """One batched Algorithm 1 over the gathered observations.
+
+        Restores fleet member order first, so a sync-mode barrier gather
+        feeds ``decide_many`` the exact batch the single-process ``step``
+        builds — decisions stay bit-identical.
+        """
+        if not obs:
+            return []
+        ranks = self._member_ranks()
+        obs = sorted(obs, key=lambda p: ranks[p[0]])
+        pending = [(self._shell(cid), op, feats) for cid, (op, feats) in obs]
+        decisions = self.decide_many(pending)
+        return [(cid, (op, proposal, share))
+                for (cid, (op, _)), (proposal, share) in zip(obs, decisions)]
+
+    def shard_actuate(self, clients: Sequence[IOClient],
+                      decisions: Sequence[Tuple[int, tuple]],
+                      t: float) -> None:
+        for cid, (op, proposal, share) in decisions:
+            self._shell(cid).actuate(op, proposal, t, share)
+
+    def shard_collect(self, clients: Sequence[IOClient],
+                      t: float) -> List[Tuple[int, tuple]]:
+        """Pending stage-2 node boundaries owned by this shard, as
+        ``(arbiter_rank, (rows, budget_mb, crossings))`` requests."""
+        mine = {c.client_id for c in clients}
+        out: List[Tuple[int, tuple]] = []
+        for rank, arb in self._ranked_arbiters():
+            if arb.pending and arb.members[0].client_id in mine:
+                out.append((rank, (arb.collect_rows(), arb.budget(),
+                                   arb.crossings)))
+        return out
+
+    def bus_resolve(self, requests: Sequence[Tuple[int, tuple]],
+                    t: float) -> List[Tuple[int, tuple]]:
+        """Batched Algorithm 2 over every gathered node: one
+        ``cache_allocation_many`` call (or the scalar loop in
+        ``stage2="scalar"`` mode), with ``budget_trading`` moving budget
+        across all gathered nodes — including nodes from different
+        shards, which is how cross-shard trading happens. Replies are
+        ``(arbiter_rank, (allocation_row, effective_budget_mb))``.
+        """
+        if not requests:
+            return []
+        requests = sorted(requests, key=lambda p: p[0])
+        all_rows = [rows for _, (rows, _, _) in requests]
+        budgets = np.array([b for _, (_, b, _) in requests],
+                           dtype=np.float64)
+        crossings = [k for _, (_, _, k) in requests]
+        logged = None
+        if self.stage2_events is not None:
+            logged = [[CacheDemand(cid, act, pc, pi, w)
+                       for cid, act, pc, pi, w in zip(*rows)]
+                      for rows in all_rows]
+        t0 = time.perf_counter()
+        if self.stage2 == "batched":
+            batch = CacheDemandBatch.from_rows(all_rows, budgets)
+            effective = (trade_node_budgets(batch, self.spaces)
+                         if self.budget_trading else batch.node_budgets_mb)
+            rows_out = cache_allocation_many(batch, self.spaces,
+                                             effective).tolist()
+        else:
+            demands = [[CacheDemand(cid, act, pc, pi, w)
+                        for cid, act, pc, pi, w in zip(*rows)]
+                       for rows in all_rows]
+            if self.budget_trading:
+                effective = trade_node_budgets(
+                    CacheDemandBatch.from_rows(all_rows, budgets),
+                    self.spaces)
+            else:
+                effective = budgets
+            allocs = [cache_allocation(d, self.spaces, float(b))
+                      for d, b in zip(demands, effective)]
+            # positional rows in member order (cache_allocation covers
+            # every member, so this is apply()-equivalent via apply_slots)
+            rows_out = [[alloc[dd.client_id] for dd in d]
+                        for d, alloc in zip(demands, allocs)]
+        elapsed = time.perf_counter() - t0
+        self.arbiter_time_total += elapsed
+        self.arbiter_batch_count += 1
+        self.node_retune_count += len(requests)
+        self.boundary_count += sum(crossings)
+        if self.stage2_events is not None:
+            self.stage2_events.append(
+                (logged, budgets, np.array(effective, dtype=np.float64),
+                 crossings))
+        eff = np.asarray(effective, dtype=np.float64).tolist()
+        return [(rank, (vals, e))
+                for (rank, _), vals, e in zip(requests, rows_out, eff)]
+
+    def shard_apply(self, replies: Sequence[Tuple[int, tuple]],
+                    t: float) -> None:
+        by_rank = dict(self._ranked_arbiters())
+        for rank, (values, _effective) in replies:
+            by_rank[rank].apply_slots(values)
 
     # ----------------------------------------------------------- accounting
     @property

@@ -53,6 +53,10 @@ def default_actions(spaces: CaratSpaces) -> List[Tuple[int, int]]:
 
 class MagpieDrlPolicy(TuningPolicy):
     name = "magpie"
+    # the full-gather stress case for sharded execution: the reward is a
+    # fleet-wide sum, so every shard publishes its clients' counters and
+    # the coordinator ticks the epoch machine over the gathered view
+    gather = "fleet"
 
     def __init__(
         self,
@@ -82,6 +86,11 @@ class MagpieDrlPolicy(TuningPolicy):
         self._intervals = 0
         self._epoch_bytes = 0.0
         self._prev_total: Optional[float] = None
+        # latest observed cumulative bytes per client (bus path): stale
+        # shards keep contributing their last published counter, the
+        # bounded-staleness view of the fleet reward
+        self._latest_bytes: Dict[int, float] = {}
+        self._last_bus_tick_t: Optional[float] = None
         self.decisions: List[tuple] = []
 
     # --------------------------------------------------------- lifecycle
@@ -113,25 +122,65 @@ class MagpieDrlPolicy(TuningPolicy):
         self._action = nxt
         return self.actions[nxt]
 
-    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
-        mine = self.my_clients(clients)
-        total = self._total_bytes(mine)
+    def _tick(self, total: float, t: float) -> Optional[Tuple[int, int]]:
+        """One fleet-total sample -> the fleet-wide action, if the epoch
+        closed and the actor moved (shared by the single-process step and
+        the coordinator's ``bus_decide``)."""
         if self._prev_total is None:        # first probe: no delta yet
             self._prev_total = total
-            return
+            return None
         self._epoch_bytes += total - self._prev_total
         self._prev_total = total
         self._intervals += 1
         if self._intervals < self.dwell:
-            return
+            return None
         reward = self._epoch_bytes
         self._intervals = 0
         self._epoch_bytes = 0.0
         action = self.decide(reward)
         if action is not None:
+            self.decisions.append((t, "magpie") + action)
+        return action
+
+    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
+        mine = self.my_clients(clients)
+        action = self._tick(self._total_bytes(mine), t)
+        if action is not None:
             for client in mine:
                 client.set_rpc_config(*action)
-            self.decisions.append((t, "magpie") + action)
+
+    # --------------------------------------------------- sharded/bus path
+    def observe(self, client: IOClient, t: float, dt: float) -> float:
+        """Shard-side sample: one client's cumulative application bytes
+        (centralized observability lives at the coordinator, which sums
+        the gathered counters)."""
+        return client.stats.read.app_bytes + client.stats.write.app_bytes
+
+    def bus_decide(self, obs: Sequence[Tuple[int, float]],
+                   t: float) -> List[Tuple[int, Tuple[int, int]]]:
+        if not obs:
+            return []                       # no new counters: no epoch tick
+        for cid, total in obs:
+            self._latest_bytes[cid] = total
+        # dwell counts fleet probe intervals, not coordinator gathers: an
+        # async coordinator may gather several partial batches within one
+        # fleet interval (same t) — only the first advances the epoch
+        if self._last_bus_tick_t is not None and t <= self._last_bus_tick_t:
+            return []
+        self._last_bus_tick_t = t
+        # sum in bound-id order: the same float accumulation order as the
+        # single-process step, so sync-sharded decisions stay identical
+        ids = self.client_ids or sorted(self._latest_bytes)
+        action = self._tick(sum(self._latest_bytes.get(cid, 0.0)
+                                for cid in ids), t)
+        if action is None:
+            return []
+        return [(cid, action) for cid in ids]
+
+    def actuate(self, client: IOClient, decision: Optional[Tuple[int, int]],
+                t: float) -> None:
+        if decision is not None:
+            client.set_rpc_config(*decision)
 
     # --------------------------------------------------------- config
     def config(self) -> Dict[str, Any]:

@@ -1,0 +1,19 @@
+"""Sharded fleet execution: shards + the observation/decision bus.
+
+``runtime`` is the execution layer above the single-process
+:class:`~repro.storage.sim.Simulation`: :class:`ShardedRuntime`
+partitions a deployment's clients into node-group shards, each
+advancing its own plan -> resolve -> commit loop, while tuning policies
+gather observations and scatter decisions over a :class:`TuningBus`
+instead of touching ``sim.clients`` directly. Sync mode is
+decision-identical to the single-process step (gated by
+``benchmarks/bench_sharded.py``); async mode trades identity for
+bounded-staleness cadence isolation — a straggler shard never blocks
+the fleet's probe cadence.
+"""
+from repro.core.runtime.bus import (BusMessage, COORDINATOR, InProcessBus,
+                                    TuningBus)
+from repro.core.runtime.sharded import Shard, ShardedRuntime
+
+__all__ = ["BusMessage", "COORDINATOR", "InProcessBus", "TuningBus",
+           "Shard", "ShardedRuntime"]

@@ -1,0 +1,432 @@
+"""Sharded fleet runtime: node-group shards around an observation/decision bus.
+
+:class:`ShardedRuntime` executes a built :class:`~repro.storage.sim.Simulation`
+— its clients, cluster parameters, and attached policies — as a fleet of
+*shards*. Clients partition into shards along the deployment's node
+groups (:meth:`Simulation.node_clients`; node arbiters are shard-local
+state, so a node never splits). Each shard advances its own
+plan -> resolve -> commit loop over its clients; tuning policies never
+touch ``sim.clients`` whole but gather observations and scatter
+decisions over a :class:`~repro.core.runtime.bus.TuningBus` (see the
+``TuningPolicy`` bus protocol in ``repro.core.policies.base``).
+
+Two execution modes:
+
+``mode="sync"``
+    A deterministic round-robin scheduler on one thread, with a barrier
+    per probe interval: all shards plan, the offered demands are
+    reassembled in canonical client order and resolved against the one
+    shared cluster, all shards commit, and each tune policy runs one
+    complete bus round (observe -> gather -> decide -> scatter ->
+    actuate, then the stage-2 request/reply round). This is
+    **decision-identical to the single-process** ``Simulation.run`` —
+    same plans, same float order in the shared OST queues, same
+    ``decide_many`` batches — and ``benchmarks/bench_sharded.py`` gates
+    it hard.
+
+``mode="async"``
+    One thread per shard plus a coordinator: shards free-run their own
+    probe cadence and never wait for each other. Cross-shard coupling
+    becomes bounded-staleness gathers over the bus, tuned by
+    ``max_staleness_intervals``:
+
+    * contention: each shard resolves its own demands *plus* the other
+      shards' last published demand echoes (dropped once staler than
+      the bound) against a per-shard cluster replica;
+    * tuning: the coordinator decides over whatever fresh observations
+      have arrived — a straggler shard's stale observations are dropped,
+      never waited for, so the fleet's probe cadence is set by the
+      healthy shards (``bench_sharded.py`` gates this with an injected
+      10x-slow shard);
+    * stage-2: demand requests are answered whenever they arrive
+      (request/reply traffic is never dropped — an unanswered arbiter
+      would stall), and budget trading runs over each gathered batch,
+      conserving the summed budgets of exactly the nodes in that batch.
+
+    Async mode is *not* decision-identical: that is the point of the
+    knob. ``max_staleness_intervals=0`` still tolerates same-interval
+    skew; larger values trade coupling freshness for cadence isolation.
+
+The in-process transports share one limitation, tracked in ROADMAP:
+payloads are id-keyed and object-free on the bus, but CARAT's
+coordinator still reaches into its in-process controller shells (tuner
+RNG state) when deciding, so a true multiprocessing transport needs
+shell-state serialization behind the same :class:`TuningBus` interface.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.core.runtime.bus import COORDINATOR, InProcessBus, TuningBus
+from repro.storage.pfs import PFSCluster
+from repro.storage.sim import SimResult, Simulation
+
+
+@dataclass
+class Shard:
+    """One node group's slice of the deployment."""
+    sid: int
+    nodes: List[object]
+    clients: List[object]                  # IOClients, in sim.clients order
+    cluster: Optional[PFSCluster] = None   # async-mode replica
+    interval: int = 0                      # local intervals completed
+    t: float = 0.0
+    step_walls: List[float] = field(default_factory=list)
+    # per-policy stage-2 request keys awaiting a reply (async mode)
+    inflight: Dict[int, set] = field(default_factory=dict)
+    series: List[List[float]] = field(default_factory=list)
+
+    @property
+    def client_ids(self) -> List[int]:
+        return [c.client_id for c in self.clients]
+
+
+class ShardedRuntime:
+    """Drive an assembled Simulation as a sharded fleet (module docstring).
+
+    ``n_shards`` merges node groups round-robin into that many shards
+    (default: one shard per node group); ``shard_map`` assigns nodes to
+    shard ids explicitly. ``straggler_delay_s`` injects a per-interval
+    wall-clock delay into chosen shards — the benchmark's slow-node
+    fault injection. ``bus`` defaults to a fresh :class:`InProcessBus`.
+    """
+
+    def __init__(
+        self,
+        sim: Simulation,
+        mode: str = "sync",
+        max_staleness_intervals: int = 2,
+        n_shards: Optional[int] = None,
+        shard_map: Optional[Mapping[object, int]] = None,
+        straggler_delay_s: Optional[Mapping[int, float]] = None,
+        bus: Optional[TuningBus] = None,
+    ):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        if max_staleness_intervals < 0:
+            raise ValueError("max_staleness_intervals must be >= 0")
+        if n_shards is not None and shard_map is not None:
+            raise ValueError("pass n_shards or shard_map, not both")
+        self.sim = sim
+        self.mode = mode
+        self.max_staleness = int(max_staleness_intervals)
+        self.bus = bus if bus is not None else InProcessBus()
+        self.straggler_delay_s = dict(straggler_delay_s or {})
+
+        # --- partition node groups into shards --------------------------------
+        groups = sim.node_clients()                # node -> [client ids]
+        nodes = list(groups)
+        if shard_map is not None:
+            missing = [n for n in nodes if n not in shard_map]
+            if missing:
+                raise ValueError(f"shard_map has no shard for node(s) "
+                                 f"{missing}")
+            assign = {n: int(shard_map[n]) for n in nodes}
+        else:
+            k = len(nodes) if n_shards is None else int(n_shards)
+            if k < 1:
+                raise ValueError("n_shards must be >= 1")
+            k = min(k, len(nodes))
+            assign = {n: i % k for i, n in enumerate(nodes)}
+        by_sid: Dict[int, List[object]] = {}
+        for n in nodes:
+            by_sid.setdefault(assign[n], []).append(n)
+        by_id = {c.client_id: c for c in sim.clients}
+        self.shards: List[Shard] = []
+        for sid in sorted(by_sid):
+            cids = {cid for n in by_sid[sid] for cid in groups[n]}
+            # shard clients keep sim.clients order (canonical reassembly)
+            clients = [c for c in sim.clients if c.client_id in cids]
+            self.shards.append(Shard(sid=sid, nodes=by_sid[sid],
+                                     clients=clients))
+        self._shard_of = {c.client_id: s.sid
+                          for s in self.shards for c in s.clients}
+        bad = [sid for sid in self.straggler_delay_s
+               if sid not in {s.sid for s in self.shards}]
+        if bad:
+            raise ValueError(f"straggler_delay_s names unknown shard(s) "
+                             f"{bad} (have {[s.sid for s in self.shards]})")
+
+        # --- classify attached policies ---------------------------------------
+        # (kind, phase_list_index_order preserved)
+        self._workload = [(self._classify(p), p)
+                          for p in sim.policies("workload")]
+        self._tune = [(self._classify(p), p) for p in sim.policies("tune")]
+        if mode == "async":
+            for kind, p in self._workload + self._tune:
+                if kind == "hook":
+                    raise ValueError(
+                        f"async mode needs bus-capable policies; {p!r} is a "
+                        f"plain (clients, t, dt) hook with no 'gather' "
+                        f"declaration — wrap it in a TuningPolicy")
+            for kind, p in self._workload:
+                if kind != "local":
+                    # the async shard loop runs workload policies
+                    # shard-locally with no bus round; a fleet-gather
+                    # workload policy would silently decide from one
+                    # shard's view
+                    raise ValueError(
+                        f"async mode supports only gather='none' workload "
+                        f"policies; {p!r} declares gather='fleet'")
+        for _, p in self._tune:
+            check = getattr(p, "validate_shards", None)
+            if check is not None:
+                check(self._shard_of)
+
+    @staticmethod
+    def _classify(policy) -> str:
+        gather = getattr(policy, "gather", None)
+        if gather == "fleet":
+            return "fleet"
+        if gather == "none" and hasattr(policy, "step_shard"):
+            return "local"
+        if gather is None:
+            return "hook"
+        raise ValueError(f"policy {policy!r} declares gather={gather!r}; "
+                         f"expected 'none' or 'fleet'")
+
+    # ------------------------------------------------------------- results
+    def _start_accounting(self):
+        clients = self.sim.clients
+        self._start_read = [c.stats.read.app_bytes for c in clients]
+        self._start_write = [c.stats.write.app_bytes for c in clients]
+        for shard in self.shards:
+            shard.series = [[] for _ in shard.clients]
+            shard._prev = [c.stats.read.app_bytes + c.stats.write.app_bytes
+                           for c in shard.clients]
+
+    def _record_interval(self, shard: Shard) -> None:
+        dt = self.sim.interval_s
+        for i, c in enumerate(shard.clients):
+            total = c.stats.read.app_bytes + c.stats.write.app_bytes
+            shard.series[i].append((total - shard._prev[i]) / dt)
+            shard._prev[i] = total
+        shard.step_walls.append(time.perf_counter())
+
+    def _result(self, n_steps: int) -> SimResult:
+        sim = self.sim
+        series_of = {}
+        for shard in self.shards:
+            for c, s in zip(shard.clients, shard.series):
+                series_of[c.client_id] = s
+        return SimResult(
+            duration_s=n_steps * sim.interval_s,
+            interval_s=sim.interval_s,
+            client_throughput=[series_of[c.client_id] for c in sim.clients],
+            app_read_bytes=[c.stats.read.app_bytes - s
+                            for c, s in zip(sim.clients, self._start_read)],
+            app_write_bytes=[c.stats.write.app_bytes - s
+                             for c, s in zip(sim.clients,
+                                             self._start_write)],
+        )
+
+    def probe_cadence(self) -> Dict[int, float]:
+        """Median wall-clock seconds between completed probe intervals,
+        per shard (the straggler-tolerance metric)."""
+        out = {}
+        for shard in self.shards:
+            gaps = [b - a for a, b in zip(shard.step_walls,
+                                          shard.step_walls[1:])]
+            out[shard.sid] = statistics.median(gaps) if gaps else 0.0
+        return out
+
+    # ------------------------------------------------------------------ run
+    def run(self, duration_s: float) -> SimResult:
+        n_steps = int(round(duration_s / self.sim.interval_s))
+        self._start_accounting()
+        if self.mode == "sync":
+            for _ in range(n_steps):
+                self._sync_step()
+        else:
+            self._run_async(n_steps)
+        return self._result(n_steps)
+
+    # ------------------------------------------------------------ sync mode
+    def _sync_step(self) -> None:
+        """One barrier interval, bit-identical to ``Simulation.step``."""
+        sim = self.sim
+        dt = sim.interval_s
+        t = sim.t
+        for kind, policy in self._workload:
+            if kind == "local":
+                for shard in self.shards:
+                    policy.step_shard(shard.clients, t, dt)
+            else:                       # hooks (and fleet oddities): barrier
+                policy(sim.clients, t, dt)
+        plans: Dict[int, object] = {}
+        for shard in self.shards:
+            delay = self.straggler_delay_s.get(shard.sid)
+            if delay:
+                time.sleep(delay)
+            for c, pl in zip(shard.clients,
+                             sim.plan_phase(shard.clients, t, dt)):
+                plans[c.client_id] = pl
+        # barrier: canonical client order into the one shared cluster —
+        # per-OST accumulation is float-order-sensitive
+        fb = sim.resolve_phase([plans[c.client_id] for c in sim.clients], dt)
+        for shard in self.shards:
+            sim.commit_phase(shard.clients,
+                             [plans[c.client_id] for c in shard.clients],
+                             fb, dt)
+        sim.t += dt
+        t = sim.t
+        for shard in self.shards:
+            shard.interval += 1
+            shard.t = sim.t
+        now = self.shards[0].interval
+        for pid, (kind, policy) in enumerate(self._tune):
+            if kind == "local":
+                for shard in self.shards:
+                    policy.step_shard(shard.clients, t, dt)
+            elif kind == "fleet":
+                self._fleet_round(pid, policy, now, t, dt,
+                                  shards=self.shards, barrier=True)
+            else:
+                policy(sim.clients, t, dt)
+        for shard in self.shards:
+            self._record_interval(shard)
+
+    # ----------------------------------------------------------- bus rounds
+    def _publish_shard_traffic(self, pid: int, policy, shard: Shard,
+                               t: float, dt: float) -> None:
+        """Shard side of a fleet policy's interval: observations out,
+        pending stage-2 requests out (deduplicated while in flight)."""
+        for cid, obs in policy.shard_observe(shard.clients, t, dt):
+            self.bus.publish(f"obs/{pid}", shard.sid, shard.interval,
+                             (cid, obs))
+        inflight = shard.inflight.setdefault(pid, set())
+        for key, req in policy.shard_collect(shard.clients, t):
+            if key in inflight:
+                continue
+            inflight.add(key)
+            self.bus.publish(f"s2req/{pid}", shard.sid, shard.interval,
+                             (key, req))
+
+    def _coordinate_policy(self, pid: int, policy, now: int,
+                           t: float) -> bool:
+        """Coordinator side: gather fresh observations -> decisions, and
+        answer stage-2 requests. Returns True if any traffic moved."""
+        moved = False
+        msgs = self.bus.consume(f"obs/{pid}", now=now,
+                                max_staleness=self.max_staleness)
+        if msgs:
+            moved = True
+            for cid, dec in policy.bus_decide([m.payload for m in msgs], t):
+                self.bus.publish(f"dec/{pid}/{self._shard_of[cid]}",
+                                 COORDINATOR, now, (cid, dec))
+        # request/reply traffic is never staleness-dropped: an unanswered
+        # arbiter would stay pending (and inflight) forever
+        reqs = self.bus.consume(f"s2req/{pid}")
+        if reqs:
+            moved = True
+            route = {m.payload[0]: m.shard for m in reqs}
+            for key, rep in policy.bus_resolve([m.payload for m in reqs], t):
+                self.bus.publish(f"s2rep/{pid}/{route[key]}", COORDINATOR,
+                                 now, (key, rep))
+        return moved
+
+    def _drain_shard_inbox(self, pid: int, policy, shard: Shard,
+                           t: float) -> None:
+        msgs = self.bus.consume(f"dec/{pid}/{shard.sid}")
+        if msgs:
+            policy.shard_actuate(shard.clients,
+                                 [m.payload for m in msgs], t)
+        reps = self.bus.consume(f"s2rep/{pid}/{shard.sid}")
+        if reps:
+            payloads = [m.payload for m in reps]
+            policy.shard_apply(payloads, t)
+            inflight = shard.inflight.setdefault(pid, set())
+            inflight.difference_update(k for k, _ in payloads)
+
+    def _fleet_round(self, pid: int, policy, now: int, t: float, dt: float,
+                     shards: Sequence[Shard], barrier: bool) -> None:
+        """One complete bus round (sync mode): every shard publishes, the
+        coordinator decides over the full gather, every shard applies —
+        all within the barrier, so decisions land this interval exactly
+        like the single-process ``step``."""
+        for shard in shards:
+            self._publish_shard_traffic(pid, policy, shard, t, dt)
+        self._coordinate_policy(pid, policy, now, t)
+        for shard in shards:
+            self._drain_shard_inbox(pid, policy, shard, t)
+
+    # ----------------------------------------------------------- async mode
+    def _shard_loop(self, shard: Shard, n_steps: int,
+                    errors: List[BaseException]) -> None:
+        sim = self.sim
+        dt = sim.interval_s
+        delay = self.straggler_delay_s.get(shard.sid, 0.0)
+        # async: contention against a per-shard cluster replica fed by the
+        # other shards' (bounded-stale) demand echoes
+        shard.cluster = PFSCluster(sim.p,
+                                   sim.rng.fork(f"shard{shard.sid}"))
+        try:
+            for _ in range(n_steps):
+                t = shard.t
+                for pid, (kind, policy) in enumerate(self._tune):
+                    if kind == "fleet":
+                        self._drain_shard_inbox(pid, policy, shard, t)
+                for kind, policy in self._workload:
+                    policy.step_shard(shard.clients, t, dt)
+                plans = sim.plan_phase(shard.clients, t, dt)
+                demands = [d for pl in plans for d in pl.all_demands()]
+                self.bus.publish("demand", shard.sid, shard.interval,
+                                 demands, retain=True)
+                echoes = self.bus.latest(
+                    "demand", now=shard.interval,
+                    max_staleness=self.max_staleness,
+                    exclude_shard=shard.sid)
+                echo = [d for m in sorted(echoes, key=lambda m: str(m.shard))
+                        for d in m.payload]
+                fb = shard.cluster.resolve(demands + echo, dt)
+                sim.commit_phase(shard.clients, plans, fb, dt)
+                shard.t += dt
+                shard.interval += 1
+                t = shard.t
+                if delay:
+                    time.sleep(delay)       # injected slow node
+                for pid, (kind, policy) in enumerate(self._tune):
+                    if kind == "local":
+                        policy.step_shard(shard.clients, t, dt)
+                    else:
+                        self._publish_shard_traffic(pid, policy, shard,
+                                                    t, dt)
+                self._record_interval(shard)
+        except BaseException as e:          # surface on the caller thread
+            errors.append(e)
+
+    def _run_async(self, n_steps: int) -> None:
+        errors: List[BaseException] = []
+        threads = [threading.Thread(target=self._shard_loop,
+                                    args=(shard, n_steps, errors),
+                                    name=f"shard-{shard.sid}", daemon=True)
+                   for shard in self.shards]
+        for th in threads:
+            th.start()
+        dt = self.sim.interval_s
+        # coordinator: never waits on any one shard — decides over
+        # whatever fresh traffic has arrived at the fleet's leading edge
+        while any(th.is_alive() for th in threads):
+            now = max(s.interval for s in self.shards)
+            moved = False
+            for pid, (kind, policy) in enumerate(self._tune):
+                if kind == "fleet":
+                    moved |= self._coordinate_policy(pid, policy, now,
+                                                     now * dt)
+            if not moved:
+                self.bus.wait(0.002)
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        # final pass: answer anything published by the last intervals so
+        # no request is left dangling (replies may go unapplied — the run
+        # is over, matching a real shutdown)
+        now = max(s.interval for s in self.shards)
+        for pid, (kind, policy) in enumerate(self._tune):
+            if kind == "fleet":
+                self._coordinate_policy(pid, policy, now, now * dt)

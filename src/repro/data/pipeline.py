@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.config.types import ArchConfig, CaratConfig, DataConfig, Family, ShapeConfig
 from repro.core.controller import CaratController, NodeCacheArbiter
+from repro.core.policies.local import PerClientPolicy
 from repro.core.policy import CaratSpaces, default_spaces
 from repro.storage.params import PFSParams
 from repro.storage.sim import Simulation
@@ -108,8 +109,9 @@ class PFSDataPipeline:
             for h in range(n_hosts):
                 arb = NodeCacheArbiter(spaces)
                 ctrl = CaratController(h, spaces, models, carat, arbiter=arb)
-                self.sim.attach_controller(h, ctrl)
                 self.controllers.append(ctrl)
+            self.sim.attach_policy(PerClientPolicy(
+                {c.client_id: c for c in self.controllers}))
         self.stats = PipelineStats()
         self._demand_issued = 0.0      # cumulative per-host demand (bytes)
 

@@ -17,7 +17,7 @@ from repro.storage.workloads import (WorkloadSpec, WORKLOADS, get_workload,
                                      idle_workload)
 from repro.storage.client import IOClient, ClientConfig
 from repro.storage.pfs import PFSCluster
-from repro.storage.sim import Simulation, SimResult
+from repro.storage.sim import SchedulePolicy, Simulation, SimResult
 from repro.storage.replay import (Trace, TraceRecord, WorkloadSchedule,
                                   SchedulePhase, parse_trace, render_trace,
                                   load_trace, bundled_traces,
@@ -29,7 +29,7 @@ from repro.storage.replay import (Trace, TraceRecord, WorkloadSchedule,
 __all__ = [
     "PFSParams", "PAGE_SIZE", "WorkloadSpec", "WORKLOADS", "get_workload",
     "idle_workload", "IOClient", "ClientConfig", "PFSCluster", "Simulation",
-    "SimResult", "Trace", "TraceRecord", "WorkloadSchedule", "SchedulePhase",
+    "SimResult", "SchedulePolicy", "Trace", "TraceRecord", "WorkloadSchedule", "SchedulePhase",
     "parse_trace", "render_trace", "load_trace", "bundled_traces",
     "load_bundled_trace", "compile_trace", "segment_phases",
     "schedule_from_names", "simulation_from_schedules",

@@ -36,7 +36,7 @@ from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.storage.client import ClientConfig
-from repro.storage.sim import Simulation
+from repro.storage.sim import SchedulePolicy, Simulation
 from repro.storage.workloads import KiB, MiB, WorkloadSpec, idle_workload
 from repro.utils.rng import RngStream
 
@@ -444,8 +444,7 @@ def simulation_from_schedules(
         [schedules[i].spec_at(0.0) for i in ids],
         params=params, configs=configs, seed=seed, interval_s=interval_s,
         stripe_offsets=stripe_offsets, topology=topology, client_ids=ids)
-    for i in ids:
-        sim.attach_schedule(i, schedules[i])
+    sim.attach_policy(SchedulePolicy({i: schedules[i] for i in ids}))
     return sim
 
 

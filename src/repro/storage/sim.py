@@ -11,11 +11,21 @@ itself never inspects global state on behalf of a policy — what a
 policy observes is its own contract (CARAT/DIAL read only their own
 client's counters; a Magpie-style centralized actor reads them all).
 
-The three pre-policy hooks — ``attach_controller`` (per-client
-callback), ``attach_fleet`` (batched callback), ``attach_schedule``
-(workload replay) — are kept as thin shims for one release; internally
-each is hosted by a policy on the same step path, so old-style wiring
-produces identical decisions (regression-tested).
+The interval itself decomposes into shard-steppable phases —
+:meth:`Simulation.plan_phase` (per-client, independent),
+:meth:`Simulation.resolve_phase` (the one globally-coupled point: every
+demand meets the shared OST queues), and :meth:`Simulation.commit_phase`
+(per-client, independent). :meth:`step` composes them over the whole
+client list; :class:`repro.core.runtime.ShardedRuntime` runs the same
+phases per node-group shard, with policies gathering observations and
+scattering decisions over a message bus instead of touching
+``sim.clients`` directly.
+
+The pre-policy hooks (``attach_controller`` / ``attach_fleet`` /
+``attach_schedule``) are gone: per-client callbacks attach as a
+:class:`repro.core.policies.PerClientPolicy`, fleet hooks are policies
+(any ``(clients, t, dt)`` callable attaches directly), and phase
+schedules attach as a :class:`SchedulePolicy`.
 """
 from __future__ import annotations
 
@@ -24,12 +34,13 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.storage.client import ClientConfig, IOClient
 from repro.storage.params import PFSParams
-from repro.storage.pfs import PFSCluster
+from repro.storage.pfs import ClusterFeedback, PFSCluster
 from repro.storage.workloads import WorkloadSpec
 from repro.utils.rng import RngStream
 
-# controller callback: (client, t, dt) -> None; may call set_rpc_config /
-# set_cache_limit on its own client only.
+# per-client controller callback: (client, t, dt) -> None; may call
+# set_rpc_config / set_cache_limit on its own client only (attach via
+# repro.core.policies.PerClientPolicy).
 Controller = Callable[[IOClient, float, float], None]
 
 # fleet/policy callback: (clients, t, dt) -> None; invoked once per step with
@@ -50,70 +61,55 @@ ScheduleLike = object
 PolicyLike = object
 
 
-class _ScheduleHost:
-    """Internal ``phase="workload"`` policy hosting the attached phase
-    schedules: consulted at the top of every step, so workload switches
-    land exactly on interval boundaries with carried state (dirty cache,
-    last_wait) deliberately preserved."""
+class SchedulePolicy:
+    """``phase="workload"`` policy driving clients from phase schedules.
 
+    Consulted at the top of every step, so workload switches land
+    exactly on interval boundaries with carried state (dirty cache,
+    last_wait) deliberately preserved. Per-client and gather-free by
+    construction — each schedule touches only its own client — so a
+    sharded runtime steps it per shard with no cross-shard messages.
+    """
+
+    name = "schedule"
     phase = "workload"
+    gather = "none"
 
-    def __init__(self):
-        self.schedules: Dict[int, "ScheduleLike"] = {}
+    def __init__(self, schedules: Mapping[int, "ScheduleLike"]):
+        self.schedules: Dict[int, "ScheduleLike"] = {
+            int(cid): sched for cid, sched in schedules.items()}
 
-    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
-        if not self.schedules:
-            return
-        by_id = {c.client_id: c for c in clients}
+    def bind(self, sim, client_ids: Optional[Sequence[int]] = None) -> None:
+        if client_ids is not None:
+            extra = set(self.schedules) - {int(i) for i in client_ids}
+            if extra:
+                raise ValueError(f"schedules cover client(s) {sorted(extra)} "
+                                 f"outside client_ids {sorted(client_ids)}")
+        for cid in self.schedules:
+            sim.client_by_id(cid)           # fail fast on unknown ids
+
+    def _switch(self, client: IOClient, sched: "ScheduleLike",
+                t: float) -> None:
         # set_workload swaps only the demand descriptor, so carried state
         # (dirty cache, last_wait, last_drain) survives the switch
-        for cid, sched in self.schedules.items():
-            client = by_id[cid]
-            spec = sched.spec_at(t)
-            if spec is not client.workload:
-                client.set_workload(spec)
-
-    __call__ = step
-
-
-class _ControllerHost:
-    """Internal policy hosting the legacy per-client controller
-    callbacks, preserving their attach-order invocation and by-id client
-    resolution (controllers over reordered or non-dense client id sets
-    must not tune the wrong client)."""
-
-    phase = "tune"
-
-    def __init__(self):
-        self.controllers: Dict[int, Controller] = {}
+        spec = sched.spec_at(t)
+        if spec is not client.workload:
+            client.set_workload(spec)
 
     def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
-        if not self.controllers:
-            return
+        from repro.core.policies.base import resolve_bound_clients
+        targets = resolve_bound_clients(f"policy {self.name!r}",
+                                        list(self.schedules), clients)
+        for client, sched in zip(targets, self.schedules.values()):
+            self._switch(client, sched, t)
+
+    def step_shard(self, clients: Sequence[IOClient], t: float,
+                   dt: float) -> None:
         by_id = {c.client_id: c for c in clients}
-        for cid, ctrl in self.controllers.items():
+        for cid, sched in self.schedules.items():
             client = by_id.get(cid)
-            if client is None:
-                raise KeyError(f"controller bound to client {cid} has no "
-                               f"matching client (got ids {sorted(by_id)})")
-            ctrl(client, t, dt)
-
-    __call__ = step
-
-
-class _FleetHost:
-    """Internal policy hosting the legacy ``attach_fleet`` hooks; iterates
-    the public ``sim.fleets`` list live, so pre-policy code that mutates
-    it (``fleets.clear()`` between runs) still detaches fleets."""
-
-    phase = "tune"
-
-    def __init__(self):
-        self.fleets: List[FleetHook] = []
-
-    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
-        for fleet in self.fleets:
-            fleet(clients, t, dt)
+            if client is not None:
+                self._switch(client, sched, t)
 
     __call__ = step
 
@@ -156,8 +152,9 @@ class Simulation:
                     f"topology maps {len(topology)} clients but the "
                     f"simulation has {len(workloads)} workloads")
         # client -> node map (position-aligned with `clients`); consumed by
-        # repro.core.fleet.attach_fleet_to to wire one stage-2 cache
-        # arbiter per node. None = no multi-node structure declared.
+        # CaratPolicy.bind to wire one stage-2 cache arbiter per node and
+        # by ShardedRuntime to partition clients into node-group shards.
+        # None = no multi-node structure declared.
         self.topology = topology
         self.p = params or PFSParams()
         self.interval_s = interval_s
@@ -187,24 +184,10 @@ class Simulation:
                 rng=self.rng.fork(f"client{cid}"),
                 stripe_offset=offset,
             ))
-        # Everything that drives clients is a policy on one of two step
-        # phases. The legacy hooks are hosted with their pre-policy
-        # ordering frozen: per-client controllers first, then every
-        # attach_fleet hook; policies attached via attach_policy run
-        # after both, in attach order.
-        self._schedule_host = _ScheduleHost()
-        self._controller_host = _ControllerHost()
-        self._fleet_host = _FleetHost()
-        self._workload_policies: List[PolicyLike] = [self._schedule_host]
-        self._tune_policies: List[PolicyLike] = [self._controller_host,
-                                                 self._fleet_host]
-        # back-compat views onto the hosts' state (live: mutating them
-        # attaches/detaches exactly as before the policy refactor)
-        self.controllers: Dict[int, Controller] = \
-            self._controller_host.controllers
-        self.schedules: Dict[int, "ScheduleLike"] = \
-            self._schedule_host.schedules
-        self.fleets: List[FleetHook] = self._fleet_host.fleets
+        # everything that drives clients is a policy on one of two step
+        # phases, invoked in attach order within its phase
+        self._workload_policies: List[PolicyLike] = []
+        self._tune_policies: List[PolicyLike] = []
         self.t = 0.0
 
     def client_by_id(self, client_id: int) -> IOClient:
@@ -244,30 +227,30 @@ class Simulation:
             self._tune_policies.append(policy)
         return policy
 
-    # --- deprecated shims (kept for one release) ------------------------------
-    def attach_controller(self, client_id: int, controller: Controller) -> None:
-        """Deprecated shim: per-client controller callback, hosted on the
-        policy path (use :meth:`attach_policy` for new code)."""
-        self.client_by_id(client_id)     # fail fast on unknown ids
-        self.controllers[client_id] = controller
+    def detach_policy(self, policy: "PolicyLike") -> None:
+        """Remove a previously attached policy (no-op bindings are not
+        undone; the policy simply stops being invoked)."""
+        for bucket in (self._workload_policies, self._tune_policies):
+            if policy in bucket:
+                bucket.remove(policy)
+                return
+        raise ValueError(f"policy {policy!r} is not attached")
 
-    def attach_schedule(self, client_id: int, schedule: "ScheduleLike") -> None:
-        """Drive a client's workload from a time-ordered phase schedule
-        (any object with ``spec_at(t) -> WorkloadSpec``). Deprecated
-        shim, hosted on the ``phase="workload"`` policy path."""
-        self.client_by_id(client_id)
-        self.schedules[client_id] = schedule
-
-    def attach_fleet(self, fleet: FleetHook) -> None:
-        """Deprecated shim: attach a fleet controller invoked once per
-        step with all clients, after any per-client controllers (use
-        :meth:`attach_policy` for new code — policies are fleet hooks)."""
-        self.fleets.append(fleet)
+    def policies(self, phase: Optional[str] = None) -> List["PolicyLike"]:
+        """Attached policies, in invocation order (optionally one phase)."""
+        if phase == "workload":
+            return list(self._workload_policies)
+        if phase == "tune":
+            return list(self._tune_policies)
+        if phase is None:
+            return list(self._workload_policies) + list(self._tune_policies)
+        raise ValueError(f"phase must be 'workload', 'tune' or None, "
+                         f"got {phase!r}")
 
     def node_clients(self) -> Dict[object, List[int]]:
         """Node id -> client ids, from the declared topology. With no
         topology declared, each client is its own node (matching
-        ``attach_fleet_to``'s private-arbiter default)."""
+        ``CaratPolicy``'s private-arbiter default)."""
         topo = self.topology if self.topology is not None \
             else list(range(len(self.clients)))
         out: Dict[object, List[int]] = {}
@@ -275,22 +258,39 @@ class Simulation:
             out.setdefault(node, []).append(c.client_id)
         return out
 
+    # --- shard-steppable interval phases --------------------------------------
+    def plan_phase(self, clients: Sequence[IOClient], t: float,
+                   dt: float) -> List[object]:
+        """Per-client planning (independent: any client subset, any order)."""
+        return [c.plan(t, dt, self.p.n_osts) for c in clients]
+
+    def resolve_phase(self, plans: Sequence[object],
+                      dt: float) -> ClusterFeedback:
+        """The globally-coupled phase: all offered demands meet the shared
+        OST queues at once. Demand order must be canonical (client list
+        order) — per-OST accumulation is float-order-sensitive."""
+        demands = [d for pl in plans for d in pl.all_demands()]
+        return self.cluster.resolve(demands, dt)
+
+    def commit_phase(self, clients: Sequence[IOClient],
+                     plans: Sequence[object], fb: ClusterFeedback,
+                     dt: float) -> None:
+        """Per-client commit of resolved feedback (independent)."""
+        for client, plan in zip(clients, plans):
+            client.commit(plan, fb.scale, fb.waits, dt)
+
     def step(self) -> None:
         dt = self.interval_s
         # workload-phase policies first: replayed schedules switch what the
         # clients do *before* this interval is planned
         for policy in self._workload_policies:
             policy(self.clients, self.t, dt)
-        plans = [c.plan(self.t, dt, self.p.n_osts) for c in self.clients]
-        demands = [d for pl in plans for d in pl.all_demands()]
-        fb = self.cluster.resolve(demands, dt)
-        for client, plan in zip(self.clients, plans):
-            client.commit(plan, fb.scale, fb.waits, dt)
+        plans = self.plan_phase(self.clients, self.t, dt)
+        fb = self.resolve_phase(plans, dt)
+        self.commit_phase(self.clients, plans, fb, dt)
         self.t += dt
         # tune-phase policies run after counters update (probe -> tune,
-        # Fig 4): legacy per-client controllers, then legacy fleets (both
-        # hosted, keeping the pre-policy order), then attach_policy
-        # policies in attach order
+        # Fig 4), in attach order
         for policy in self._tune_policies:
             policy(self.clients, self.t, dt)
 

@@ -6,12 +6,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config.types import CaratConfig
-from repro.core import (CaratController, FleetController, NodeCacheArbiter,
-                        default_spaces)
+from repro.core import (CaratController, CaratPolicy, NodeCacheArbiter,
+                        PerClientPolicy, default_spaces, wire_controllers)
 from repro.core.cache_tuner import (CacheDemand, CacheDemandBatch,
                                     cache_allocation, cache_allocation_many,
                                     trade_node_budgets)
-from repro.core.fleet import attach_fleet_to
 from repro.storage import Simulation, get_workload
 
 SPACES = default_spaces()
@@ -183,13 +182,12 @@ def test_fleet_deferred_drain_matches_per_client_trace(tiny_models):
     percl = [CaratController(i, SPACES, tiny_models, cfg,
                              arbiter=NodeCacheArbiter(SPACES))
              for i in range(len(BURSTY))]
-    for i, c in enumerate(percl):
-        sim_a.attach_controller(i, c)
+    sim_a.attach_policy(PerClientPolicy({c.client_id: c for c in percl}))
     res_a = sim_a.run(14.0)
 
     sim_b = _sim(BURSTY)
-    fleet = attach_fleet_to(sim_b, SPACES, tiny_models, cfg=cfg,
-                            backend="numpy")
+    fleet = sim_b.attach_policy(CaratPolicy(SPACES, tiny_models, cfg=cfg,
+                                            backend="numpy"))
     res_b = sim_b.run(14.0)
 
     assert fleet.node_retune_count > 0           # boundaries actually fired
@@ -208,9 +206,9 @@ def test_fleet_stage2_scalar_equals_batched_multi_node(tiny_models):
     results = {}
     for mode in ("scalar", "batched"):
         sim = _sim(BURSTY, topology=topology)
-        fleet = attach_fleet_to(sim, SPACES, tiny_models,
-                                node_budgets_mb=budget, stage2=mode,
-                                backend="numpy")
+        fleet = sim.attach_policy(CaratPolicy(SPACES, tiny_models,
+                                              node_budgets_mb=budget,
+                                              stage2=mode, backend="numpy"))
         res = sim.run(14.0)
         results[mode] = ([c.config.dirty_cache_mb for c in sim.clients],
                          fleet.decisions, res.app_read_bytes,
@@ -221,9 +219,9 @@ def test_fleet_stage2_scalar_equals_batched_multi_node(tiny_models):
 
 def test_fleet_budget_trading_runs_and_stays_on_grid(tiny_models):
     sim = _sim(BURSTY, topology=[0, 0, 1, 1])
-    fleet = attach_fleet_to(sim, SPACES, tiny_models,
-                            node_budgets_mb=float(SPACES.cache_max),
-                            budget_trading=True, backend="numpy")
+    fleet = sim.attach_policy(CaratPolicy(
+        SPACES, tiny_models, node_budgets_mb=float(SPACES.cache_max),
+        budget_trading=True, backend="numpy"))
     sim.run(14.0)
     assert fleet.node_retune_count > 0
     for c in sim.clients:
@@ -237,7 +235,8 @@ def test_fleet_resolves_clients_by_id(tiny_models):
     ctrls = [CaratController(i, SPACES, tiny_models,
                              arbiter=NodeCacheArbiter(SPACES))
              for i in range(2)]
-    fleet = FleetController(ctrls, tiny_models, backend="numpy")
+    fleet = CaratPolicy(models=tiny_models, controllers=ctrls,
+                        backend="numpy")
     sim.step()                       # advance counters once
     fleet(list(reversed(sim.clients)), sim.t, sim.interval_s)
     for ctrl in ctrls:
@@ -249,8 +248,9 @@ def test_fleet_missing_client_id_raises(tiny_models):
     sim = _sim(("s_rd_rn_8k",))
     ctrl = CaratController(3, SPACES, tiny_models,
                            arbiter=NodeCacheArbiter(SPACES))
-    fleet = FleetController([ctrl], tiny_models, backend="numpy")
-    with pytest.raises(KeyError):
+    fleet = CaratPolicy(models=tiny_models, controllers=[ctrl],
+                        backend="numpy")
+    with pytest.raises(KeyError, match="no matching client this step"):
         fleet(sim.clients, 0.5, 0.5)
 
 
@@ -263,24 +263,26 @@ def test_simulation_topology_validation_and_node_clients():
     assert _sim(("s_rd_rn_8k",)).node_clients() == {0: [0]}
 
 
-def test_attach_fleet_to_validation(tiny_models):
+def test_carat_policy_wiring_validation(tiny_models):
     sim = _sim(("s_rd_rn_8k", "s_wr_sq_1m"))
     with pytest.raises(ValueError):
-        attach_fleet_to(sim, SPACES, tiny_models, topology=[0])
+        sim.attach_policy(CaratPolicy(SPACES, tiny_models, topology=[0]))
     with pytest.raises(ValueError):
-        attach_fleet_to(sim, SPACES, tiny_models, topology=[0, 1],
-                        shared_node_arbiter=True)
+        wire_controllers(sim, SPACES, tiny_models, topology=[0, 1],
+                         shared_node_arbiter=True)
     with pytest.raises(ValueError):
-        attach_fleet_to(sim, SPACES, tiny_models, topology=[0, 1],
-                        node_budgets_mb={0: 512.0})   # node 1 missing
+        sim.attach_policy(CaratPolicy(SPACES, tiny_models, topology=[0, 1],
+                                      node_budgets_mb={0: 512.0}))
     with pytest.raises(ValueError):
-        FleetController([CaratController(0, SPACES, tiny_models)],
-                        tiny_models, stage2="bogus")
+        CaratPolicy(models=tiny_models,
+                    controllers=[CaratController(0, SPACES, tiny_models)],
+                    stage2="bogus")
 
 
-def test_attach_fleet_to_uses_sim_topology(tiny_models):
+def test_carat_policy_uses_sim_topology(tiny_models):
     sim = _sim(BURSTY, topology=[0, 1, 0, 1])
-    fleet = attach_fleet_to(sim, SPACES, tiny_models, backend="numpy")
+    fleet = sim.attach_policy(CaratPolicy(SPACES, tiny_models,
+                                          backend="numpy"))
     arbs = {id(c.arbiter) for c in fleet.controllers}
     assert len(arbs) == 2
     assert fleet.controllers[0].arbiter is fleet.controllers[2].arbiter

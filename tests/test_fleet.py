@@ -4,10 +4,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config.types import CaratConfig
-from repro.core import (CaratController, FleetController, NodeCacheArbiter,
-                        default_spaces, make_tuner)
+from repro.core import (CaratController, CaratPolicy, NodeCacheArbiter,
+                        PerClientPolicy, build_fleet_tuner, default_spaces,
+                        make_tuner)
 from repro.core.controller import _StageFactors
-from repro.core.fleet import attach_fleet_to, build_fleet_tuner
 from repro.kernels.gbdt_infer.ops import GridGBDTScorer
 from repro.storage import Simulation, get_workload
 from repro.utils.rng import RngStream
@@ -107,11 +107,12 @@ def test_fleet_controller_matches_per_client_trace(tiny_models, kind):
                                  arbiter=NodeCacheArbiter(SPACES))
                  for i in range(len(names))]
         if fleet:
-            sim.attach_fleet(FleetController(ctrls, tiny_models,
-                                             backend="numpy"))
+            sim.attach_policy(CaratPolicy(models=tiny_models,
+                                          controllers=ctrls,
+                                          backend="numpy"))
         else:
-            for i, c in enumerate(ctrls):
-                sim.attach_controller(i, c)
+            sim.attach_policy(PerClientPolicy(
+                {c.client_id: c for c in ctrls}))
         return ctrls
 
     sim_a = Simulation([get_workload(n) for n in names], seed=5)
@@ -128,11 +129,13 @@ def test_fleet_controller_matches_per_client_trace(tiny_models, kind):
     assert res_a.app_write_bytes == res_b.app_write_bytes
 
 
-def test_attach_fleet_to_helper(tiny_models):
+def test_carat_policy_shared_node_topology(tiny_models):
     sim = Simulation([get_workload("s_rd_rn_8k"),
                       get_workload("s_wr_sq_1m")], seed=1)
-    fleet = attach_fleet_to(sim, SPACES, tiny_models,
-                            shared_node_arbiter=True, backend="numpy")
+    fleet = sim.attach_policy(CaratPolicy(SPACES, tiny_models,
+                                          backend="numpy",
+                                          topology=[0, 0]))
+    assert fleet.controllers[0].arbiter is fleet.controllers[1].arbiter
     sim.run(10.0)
     assert fleet.decision_count > 0
     assert fleet.mean_decision_s > 0.0

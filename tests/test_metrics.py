@@ -2,6 +2,7 @@
 import numpy as np
 
 from repro.core.metrics import compute_metrics, normalize_features
+from repro.core.policies import PerClientPolicy
 from repro.core.snapshot import SnapshotBuilder
 from repro.storage import Simulation, get_workload
 from repro.storage.client import ClientConfig
@@ -18,7 +19,7 @@ def _run_snaps(wl_name, n_steps=20, cfg=None):
         if s:
             snaps.append(s)
 
-    sim.attach_controller(0, probe)
+    sim.attach_policy(PerClientPolicy({0: probe}))
     sim.run(n_steps * 0.5)
     return b, snaps
 

@@ -1,15 +1,15 @@
-"""Pluggable TuningPolicy API: registry, lifecycle, and shim identity."""
+"""Pluggable TuningPolicy API: registry, lifecycle, and path identity."""
 import numpy as np
 import pytest
 
 from repro.config.types import CaratConfig
 from repro.core import (POLICIES, CaratController, CaratPolicy, DialPolicy,
-                        FleetController, MagpieDrlPolicy, NodeCacheArbiter,
+                        MagpieDrlPolicy, NodeCacheArbiter, PerClientPolicy,
                         StaticPolicy, default_spaces, make_policy,
                         policy_from_config)
 from repro.core.policies.magpie import default_actions
-from repro.storage import (ClientConfig, Simulation, get_workload,
-                           schedule_from_names)
+from repro.storage import (ClientConfig, SchedulePolicy, Simulation,
+                           get_workload, schedule_from_names)
 
 SPACES = default_spaces()
 WLS = ["s_rd_rn_8k", "s_wr_sq_1m", "s_rd_sq_1m", "s_wr_rn_8k"]
@@ -95,31 +95,31 @@ def test_config_roundtrip_equivalent_decisions():
             == [list(d) for d in p2.decisions]
 
 
-# ------------------------------------------------------ shim regression
-def test_old_style_wiring_identical_to_attach_policy():
-    """Deprecation shims (attach_controller / attach_fleet) and the new
-    attach_policy path produce bit-identical decisions and bytes."""
+# ------------------------------------------------------ path identity
+def test_all_attach_paths_identical():
+    """The scalar per-client loop (PerClientPolicy), the prebuilt-shell
+    fleet engine, and the self-wiring registry policy produce
+    bit-identical decisions and bytes."""
     models = _models()
     cfg = CaratConfig()
 
-    sim_a = _sim()                       # old: per-client attach_controller
-    percl = []
-    for i, c in enumerate(sim_a.clients):
-        ctrl = CaratController(c.client_id, SPACES, models, cfg,
-                               arbiter=NodeCacheArbiter(SPACES))
-        sim_a.attach_controller(c.client_id, ctrl)
-        percl.append(ctrl)
+    sim_a = _sim()                       # scalar: per-client callbacks
+    percl = [CaratController(c.client_id, SPACES, models, cfg,
+                             arbiter=NodeCacheArbiter(SPACES))
+             for c in sim_a.clients]
+    sim_a.attach_policy(PerClientPolicy({c.client_id: c for c in percl}))
     res_a = sim_a.run(10.0)
 
-    sim_b = _sim()                       # old: attach_fleet(FleetController)
+    sim_b = _sim()                       # prebuilt shells, batched engine
     shells = [CaratController(c.client_id, SPACES, models, cfg,
                               arbiter=NodeCacheArbiter(SPACES, deferred=True))
               for c in sim_b.clients]
-    fleet = FleetController(shells, models, backend="numpy", cfg=cfg)
-    sim_b.attach_fleet(fleet)
+    fleet = CaratPolicy(models=models, controllers=shells, backend="numpy",
+                        cfg=cfg)
+    sim_b.attach_policy(fleet)
     res_b = sim_b.run(10.0)
 
-    sim_c = _sim()                       # new: attach_policy(carat)
+    sim_c = _sim()                       # registry self-wiring
     policy = sim_c.attach_policy(make_policy(
         "carat", spaces=SPACES, models=models, cfg=cfg, backend="numpy"))
     res_c = sim_c.run(10.0)
@@ -135,12 +135,12 @@ def test_old_style_wiring_identical_to_attach_policy():
         == [c.config.dirty_cache_mb for c in sim_c.clients]
 
 
-def test_schedule_shim_identical_to_replay_path():
-    """attach_schedule-driven workload switching is unchanged by the
-    policy-host refactor: switches land on the same boundaries."""
+def test_schedule_policy_switches_on_boundaries():
+    """SchedulePolicy-driven workload switching lands exactly on
+    interval boundaries."""
     sched = schedule_from_names(["s_rd_rn_8k", "s_wr_sq_1m"], phase_s=4.0)
     sim = Simulation([sched.spec_at(0.0)], seed=5)
-    sim.attach_schedule(0, sched)
+    sim.attach_policy(SchedulePolicy({0: sched}))
     names = []
     for _ in range(int(8.0 / sim.interval_s)):
         sim.step()
@@ -278,16 +278,19 @@ def test_carat_policy_rejects_subset_over_prebuilt_controllers():
         client_ids=[0, 1])
 
 
-def test_fleets_list_stays_live():
-    """Pre-policy code could detach a fleet by mutating sim.fleets."""
+def test_detach_policy():
+    """attach_policy/detach_policy: a detached hook stops being invoked;
+    detaching an unknown policy fails loudly."""
     sim = _sim(n=2)
     calls = []
-    sim.attach_fleet(lambda clients, t, dt: calls.append(t))
+    hook = sim.attach_policy(lambda clients, t, dt: calls.append(t))
     sim.step()
     assert len(calls) == 1
-    sim.fleets.clear()
+    sim.detach_policy(hook)
     sim.step()
     assert len(calls) == 1      # detached
+    with pytest.raises(ValueError):
+        sim.detach_policy(hook)
 
 
 def test_carat_policy_binds_topology_from_sim():

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.policies import PerClientPolicy
 from repro.storage import (PAGE_SIZE, Simulation, bundled_traces,
                            compile_trace, get_workload, idle_workload,
                            load_bundled_trace, parse_trace, render_trace,
@@ -167,7 +168,7 @@ def test_replayed_gap_fires_stage2_boundary(tiny_models):
     arb = NodeCacheArbiter(spaces, deferred=True)
     ctrl = CaratController(0, spaces, tiny_models, CaratConfig(),
                            arbiter=arb)
-    sim.attach_controller(0, ctrl)
+    sim.attach_policy(PerClientPolicy({0: ctrl}))
     while sim.t < 5.0:
         sim.step()
     assert not arb.pending                # still mid-first-phase
@@ -191,7 +192,7 @@ def test_controllers_resolve_by_client_id_not_position():
     wls = [get_workload("s_rd_rn_8k"), get_workload("s_wr_sq_1m")]
     sim = Simulation(wls, seed=0, client_ids=[7, 3])
     rec = _Recorder()
-    sim.attach_controller(3, rec)
+    sim.attach_policy(PerClientPolicy({3: rec}))
     sim.step()
     assert rec.seen == [3]
     # reordering the client list after attach must not change resolution
@@ -199,7 +200,8 @@ def test_controllers_resolve_by_client_id_not_position():
     sim.step()
     assert rec.seen == [3, 3]
     with pytest.raises(KeyError):
-        sim.attach_controller(0, rec)     # unknown id fails fast
+        # unknown id fails fast at bind
+        sim.attach_policy(PerClientPolicy({0: rec}))
 
 
 def test_client_ids_validation():

@@ -1,0 +1,260 @@
+"""Sharded fleet runtime: sync decision identity, async bounded
+staleness, cross-shard budget conservation, and the shared loud-failure
+diagnostics of every client-resolution path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.types import CaratConfig
+from repro.core import (CaratController, CaratPolicy, NodeCacheArbiter,
+                        PerClientPolicy, default_spaces, make_policy)
+from repro.core.policies.base import TuningPolicy
+from repro.core.runtime import InProcessBus, ShardedRuntime
+from repro.storage import (SchedulePolicy, Simulation, bundled_traces,
+                           compile_trace, get_workload, load_bundled_trace,
+                           schedule_from_names, simulation_from_schedules)
+
+SPACES = default_spaces()
+BURSTY = ("dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m")
+
+
+def _synthetic_model(salt: float):
+    """Deterministic, batch-invariant pseudo-probabilities in [0, 1]."""
+
+    def model(X):
+        z = np.sin(X.astype(np.float64).sum(axis=1) * 12.9898 + salt)
+        return (z + 1.0) / 2.0
+
+    return model
+
+
+def _models():
+    return {"read": _synthetic_model(0.0), "write": _synthetic_model(1.7)}
+
+
+def _fleet_sim(n_nodes=2, cpn=2, seed=11, **kw):
+    n = n_nodes * cpn
+    wls = [get_workload(BURSTY[i % len(BURSTY)]) for i in range(n)]
+    return Simulation(wls, seed=seed,
+                      topology=[i // cpn for i in range(n)], **kw)
+
+
+def _signature(sim, policy, res):
+    return ([c.config.dirty_cache_mb for c in sim.clients],
+            [(c.config.rpc_window_pages, c.config.rpcs_in_flight)
+             for c in sim.clients],
+            getattr(policy, "decisions", None),
+            res.app_read_bytes, res.app_write_bytes, res.client_throughput)
+
+
+# ------------------------------------------------- sync decision identity
+def test_sync_identity_multi_node_carat_with_trading():
+    """Barrier mode over node-group shards == single-process Simulation,
+    including the bus-routed stage-2 drain and cross-shard trading."""
+    budgets = {0: 0.3 * SPACES.cache_max * 2, 1: 2.0 * SPACES.cache_max * 2}
+
+    def build():
+        sim = _fleet_sim()
+        pol = sim.attach_policy(CaratPolicy(
+            SPACES, _models(), backend="numpy", node_budgets_mb=budgets,
+            budget_trading=True))
+        return sim, pol
+
+    sim_a, pol_a = build()
+    res_a = sim_a.run(14.0)
+    sim_b, pol_b = build()
+    rt = ShardedRuntime(sim_b, mode="sync")
+    res_b = rt.run(14.0)
+    assert len(rt.shards) == 2
+    assert pol_b.boundary_count > 0          # stage-2 rode the bus
+    assert _signature(sim_a, pol_a, res_a) == _signature(sim_b, pol_b, res_b)
+    assert pol_a.boundary_count == pol_b.boundary_count
+
+
+@pytest.mark.parametrize("trace", sorted(bundled_traces()))
+def test_sync_identity_replay_corpus(trace):
+    """Every bundled trace: sync-sharded replay (schedules on the
+    workload phase, CARAT on the bus) == single-process replay."""
+    schedules = compile_trace(load_bundled_trace(trace))
+    duration = min(max(s.duration for s in schedules.values()), 30.0)
+
+    def build():
+        sim = simulation_from_schedules(schedules, seed=3)
+        pol = sim.attach_policy(CaratPolicy(SPACES, _models(),
+                                            backend="numpy"))
+        return sim, pol
+
+    sim_a, pol_a = build()
+    res_a = sim_a.run(duration)
+    sim_b, pol_b = build()
+    res_b = ShardedRuntime(sim_b, mode="sync", n_shards=2).run(duration)
+    assert _signature(sim_a, pol_a, res_a) == _signature(sim_b, pol_b, res_b)
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("static", {}),
+    ("dial", {"spaces": SPACES, "seed": 2}),
+    ("magpie", {"spaces": SPACES, "seed": 2, "dwell": 2}),
+])
+def test_sync_identity_other_policies(name, kwargs):
+    """The bus path is policy-agnostic: pure-local policies (static,
+    dial) and the full-gather stress case (magpie) are sync-identical."""
+    def build():
+        sim = _fleet_sim(seed=13)
+        return sim, sim.attach_policy(make_policy(name, **kwargs))
+
+    sim_a, pol_a = build()
+    res_a = sim_a.run(12.0)
+    sim_b, pol_b = build()
+    res_b = ShardedRuntime(sim_b, mode="sync").run(12.0)
+    assert _signature(sim_a, pol_a, res_a) == _signature(sim_b, pol_b, res_b)
+
+
+# ------------------------------------------------- async property tests
+@settings(max_examples=4, deadline=None)
+@given(staleness=st.integers(0, 3), seed=st.integers(0, 100))
+def test_async_respects_max_staleness(staleness, seed):
+    """The bus never *delivers* an observation staler than the knob, and
+    a lagging straggler's over-stale traffic is dropped, not waited for."""
+    sim = _fleet_sim(seed=seed)
+    sim.attach_policy(CaratPolicy(SPACES, _models(), backend="numpy"))
+    rt = ShardedRuntime(sim, mode="async", max_staleness_intervals=staleness,
+                        straggler_delay_s={0: 0.004})
+    rt.run(8.0)
+    stats = rt.bus.stats()
+    assert stats["max_staleness_seen"] <= staleness
+    # every shard still completed every interval (nobody blocked)
+    n_steps = int(round(8.0 / sim.interval_s))
+    assert all(s.interval == n_steps for s in rt.shards)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 100), starve=st.floats(0.1, 0.5))
+def test_async_cross_shard_trading_conserves_budget(seed, starve):
+    """Every coordinator trading round over a gathered (cross-shard)
+    node batch conserves the summed budgets of exactly those nodes."""
+    cpn = 2
+    budgets = {0: float(SPACES.cache_max * cpn * starve),
+               1: float(SPACES.cache_max * cpn * 1.5),
+               2: float(SPACES.cache_max * cpn * starve)}
+    sim = _fleet_sim(n_nodes=3, cpn=cpn, seed=seed)
+    pol = sim.attach_policy(CaratPolicy(
+        SPACES, _models(), backend="numpy", node_budgets_mb=budgets,
+        budget_trading=True, log_stage2=True))
+    rt = ShardedRuntime(sim, mode="async", max_staleness_intervals=2,
+                        straggler_delay_s={1: 0.002})
+    rt.run(14.0)
+    assert pol.stage2_events, "no stage-2 rounds fired — vacuous"
+    for _, raw, effective, _ in pol.stage2_events:
+        assert float(effective.sum()) <= float(raw.sum()) * (1 + 1e-12) + 1e-6
+
+
+def test_async_rejects_plain_hooks():
+    sim = _fleet_sim()
+    sim.attach_policy(lambda clients, t, dt: None)
+    with pytest.raises(ValueError, match="bus-capable"):
+        ShardedRuntime(sim, mode="async")
+
+
+def test_runtime_rejects_arbiter_spanning_shards():
+    """A stage-2 arbiter shared across two nodes' clients cannot be
+    sharded along the node topology."""
+    sim = _fleet_sim(n_nodes=2, cpn=1)
+    arb = NodeCacheArbiter(SPACES, deferred=True)
+    shells = [CaratController(c.client_id, SPACES, _models(), arbiter=arb)
+              for c in sim.clients]
+    sim.attach_policy(CaratPolicy(models=_models(), controllers=shells,
+                                  backend="numpy"))
+    with pytest.raises(ValueError, match="spans shards"):
+        ShardedRuntime(sim, mode="sync")
+
+
+def test_runtime_partition_validation():
+    sim = _fleet_sim()
+    with pytest.raises(ValueError):
+        ShardedRuntime(sim, mode="warp")
+    with pytest.raises(ValueError):
+        ShardedRuntime(sim, n_shards=0)
+    with pytest.raises(ValueError):
+        ShardedRuntime(sim, shard_map={0: 0})            # node 1 missing
+    with pytest.raises(ValueError):
+        ShardedRuntime(sim, straggler_delay_s={9: 0.1})  # unknown shard
+    rt = ShardedRuntime(sim, shard_map={0: 5, 1: 5})     # merge into one
+    assert len(rt.shards) == 1
+    assert sorted(rt.shards[0].client_ids) == [0, 1, 2, 3]
+
+
+# --------------------------------------- loud missing-client diagnostics
+MISSING_RE = r"bound to client\(s\) \[3\] with no matching client this step"
+
+
+def _one_client_sim():
+    return Simulation([get_workload("s_rd_rn_8k")], seed=0)
+
+
+def test_missing_client_diagnostics_share_one_shape():
+    """Every resolution path fails loudly with the same message shape:
+    base my_clients, PerClientPolicy, SchedulePolicy, CaratPolicy."""
+    sim = _one_client_sim()
+
+    base = TuningPolicy()
+    base.client_ids = [3]
+    with pytest.raises(KeyError, match=MISSING_RE):
+        base.my_clients(sim.clients)
+
+    percl = PerClientPolicy({3: lambda c, t, dt: None})
+    with pytest.raises(KeyError, match=MISSING_RE):
+        percl.step(sim.clients, 0.5, 0.5)
+
+    sched = SchedulePolicy(
+        {3: schedule_from_names(["s_rd_rn_8k"], phase_s=4.0)})
+    with pytest.raises(KeyError, match=MISSING_RE):
+        sched.step(sim.clients, 0.0, 0.5)
+
+    carat = CaratPolicy(
+        models=_models(),
+        controllers=[CaratController(3, SPACES, _models(),
+                                     arbiter=NodeCacheArbiter(SPACES))],
+        backend="numpy")
+    with pytest.raises(KeyError, match=MISSING_RE):
+        carat.step(sim.clients, 0.5, 0.5)
+
+
+def test_present_clients_is_the_explicit_subset_path():
+    """Shard views use present_clients, which (deliberately) tolerates
+    absent bound ids — in contrast to the loud my_clients."""
+    sim = Simulation([get_workload("s_rd_rn_8k"),
+                      get_workload("s_wr_sq_1m")], seed=0)
+    pol = TuningPolicy()
+    pol.bind(sim)
+    subset = sim.clients[:1]
+    assert [c.client_id for c in pol.present_clients(subset)] == [0]
+    with pytest.raises(KeyError):
+        pol.my_clients(subset)
+
+
+# ----------------------------------------------------- bus unit behaviour
+def test_bus_staleness_accounting():
+    bus = InProcessBus()
+    bus.publish("obs", shard=0, interval=5, payload="fresh")
+    bus.publish("obs", shard=1, interval=1, payload="stale")
+    got = bus.consume("obs", now=5, max_staleness=2)
+    assert [m.payload for m in got] == ["fresh"]
+    stats = bus.stats()
+    assert stats["dropped_stale"] == 1
+    assert stats["max_staleness_seen"] == 0
+    # retained latest: one slot per shard (no queue history to grow),
+    # staleness-filtered the same way
+    bus.publish("demand", shard=0, interval=4, payload="a", retain=True)
+    bus.publish("demand", shard=0, interval=6, payload="b", retain=True)
+    bus.publish("demand", shard=1, interval=6, payload="c", retain=True)
+    assert bus.consume("demand") == []       # retained != queued
+    latest = bus.latest("demand", now=6, max_staleness=3, exclude_shard=1)
+    assert [m.payload for m in latest] == ["b"]
+    assert bus.stats()["max_staleness_seen"] == 0
+    # re-polling a stale retained message must not inflate dropped_stale
+    # (it would measure poll frequency, not messages)
+    before = bus.stats()["dropped_stale"]
+    for _ in range(3):
+        assert bus.latest("demand", now=20, max_staleness=1) == []
+    assert bus.stats()["dropped_stale"] == before

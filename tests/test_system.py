@@ -2,7 +2,8 @@
 import numpy as np
 
 from repro.config.types import CaratConfig
-from repro.core import CaratController, NodeCacheArbiter, default_spaces
+from repro.core import (CaratController, NodeCacheArbiter, PerClientPolicy,
+                        default_spaces)
 from repro.storage import Simulation, get_workload
 from repro.storage.client import ClientConfig
 from repro.storage.sim import run_static
@@ -14,7 +15,7 @@ def _carat_run(wl_name, models, duration=25.0, seed=7):
     spaces = default_spaces()
     ctrl = CaratController(0, spaces, models, CaratConfig(),
                            arbiter=NodeCacheArbiter(spaces))
-    sim.attach_controller(0, ctrl)
+    sim.attach_policy(PerClientPolicy({0: ctrl}))
     res = sim.run(duration)
     return res.client_mean_throughput(0), ctrl
 
@@ -51,12 +52,10 @@ def test_decentralized_controllers_are_independent(tiny_models):
     wls = [get_workload("s_rd_rn_8k"), get_workload("s_wr_sq_1m")]
     sim = Simulation(wls, configs=[ClientConfig(), ClientConfig()], seed=3)
     spaces = default_spaces()
-    ctrls = []
-    for i in range(2):
-        c = CaratController(i, spaces, tiny_models, CaratConfig(),
-                            arbiter=NodeCacheArbiter(spaces))
-        sim.attach_controller(i, c)
-        ctrls.append(c)
+    ctrls = [CaratController(i, spaces, tiny_models, CaratConfig(),
+                             arbiter=NodeCacheArbiter(spaces))
+             for i in range(2)]
+    sim.attach_policy(PerClientPolicy({c.client_id: c for c in ctrls}))
     sim.run(25.0)
     cfg0 = (sim.clients[0].config.rpc_window_pages,
             sim.clients[0].config.rpcs_in_flight)
@@ -75,7 +74,7 @@ def test_two_stage_gating(tiny_models):
     spaces = default_spaces()
     ctrl = CaratController(0, spaces, tiny_models, CaratConfig(),
                            arbiter=NodeCacheArbiter(spaces))
-    sim.attach_controller(0, ctrl)
+    sim.attach_policy(PerClientPolicy({0: ctrl}))
     sim.run(20.0)
     wl = get_workload("dlio_bert")
     for (t, op, w, f) in ctrl.decisions:
