@@ -275,10 +275,20 @@ class CaratPolicy(TuningPolicy):
         return (ctrl, req[0], req[1])
 
     def _shell(self, client_id: int) -> CaratController:
-        for c in self.controllers:
-            if c.client_id == client_id:
-                return c
-        raise KeyError(f"no CARAT shell for client {client_id}")
+        # id -> controller index, rebuilt whenever the shell list is
+        # replaced or grown (bind); the per-call linear scan was
+        # quadratic at fleet scale
+        cache = getattr(self, "_shell_cache", None)
+        if (cache is None or cache[0] is not self.controllers
+                or len(cache[1]) != len(self.controllers)):
+            cache = (self.controllers,
+                     {c.client_id: c for c in self.controllers})
+            self._shell_cache = cache
+        try:
+            return cache[1][client_id]
+        except KeyError:
+            raise KeyError(
+                f"no CARAT shell for client {client_id}") from None
 
     def decide(self, obs: tuple):
         return self.decide_many([obs])[0]

@@ -61,9 +61,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence
 
+import numpy as np
+
 from repro.core.runtime.bus import COORDINATOR, InProcessBus, TuningBus
 from repro.storage.pfs import PFSCluster
 from repro.storage.sim import SimResult, Simulation
+from repro.storage.soa import DemandBatch
 
 
 @dataclass
@@ -73,6 +76,7 @@ class Shard:
     nodes: List[object]
     clients: List[object]                  # IOClients, in sim.clients order
     cluster: Optional[PFSCluster] = None   # async-mode replica
+    idx: Optional[np.ndarray] = None       # SoA core rows (soa backend)
     interval: int = 0                      # local intervals completed
     t: float = 0.0
     step_walls: List[float] = field(default_factory=list)
@@ -141,8 +145,11 @@ class ShardedRuntime:
             cids = {cid for n in by_sid[sid] for cid in groups[n]}
             # shard clients keep sim.clients order (canonical reassembly)
             clients = [c for c in sim.clients if c.client_id in cids]
-            self.shards.append(Shard(sid=sid, nodes=by_sid[sid],
-                                     clients=clients))
+            self.shards.append(Shard(
+                sid=sid, nodes=by_sid[sid], clients=clients,
+                idx=(np.fromiter((c.index for c in clients), dtype=np.int64,
+                                 count=len(clients))
+                     if sim.core is not None else None)))
         self._shard_of = {c.client_id: s.sid
                           for s in self.shards for c in s.clients}
         bad = [sid for sid in self.straggler_delay_s
@@ -191,6 +198,17 @@ class ShardedRuntime:
 
     # ------------------------------------------------------------- results
     def _start_accounting(self):
+        core = self.sim.core
+        if core is not None:
+            # whole-array accounting off the SoA cumulative counters —
+            # no per-client Python loop at fleet scale
+            self._start_read = core.read.app_bytes.copy()
+            self._start_write = core.write.app_bytes.copy()
+            total = core.read.app_bytes + core.write.app_bytes
+            for shard in self.shards:
+                shard.series = []            # list of (len(shard),) columns
+                shard._prev = total[shard.idx]
+            return
         clients = self.sim.clients
         self._start_read = [c.stats.read.app_bytes for c in clients]
         self._start_write = [c.stats.write.app_bytes for c in clients]
@@ -201,14 +219,35 @@ class ShardedRuntime:
 
     def _record_interval(self, shard: Shard) -> None:
         dt = self.sim.interval_s
-        for i, c in enumerate(shard.clients):
-            total = c.stats.read.app_bytes + c.stats.write.app_bytes
-            shard.series[i].append((total - shard._prev[i]) / dt)
-            shard._prev[i] = total
+        core = self.sim.core
+        if core is not None:
+            total = (core.read.app_bytes + core.write.app_bytes)[shard.idx]
+            shard.series.append((total - shard._prev) / dt)
+            shard._prev = total
+        else:
+            for i, c in enumerate(shard.clients):
+                total = c.stats.read.app_bytes + c.stats.write.app_bytes
+                shard.series[i].append((total - shard._prev[i]) / dt)
+                shard._prev[i] = total
         shard.step_walls.append(time.perf_counter())
 
     def _result(self, n_steps: int) -> SimResult:
         sim = self.sim
+        core = sim.core
+        if core is not None:
+            full = np.zeros((core.n, n_steps))
+            for shard in self.shards:
+                if shard.series:
+                    full[shard.idx, :] = np.stack(shard.series, axis=1)
+            return SimResult(
+                duration_s=n_steps * sim.interval_s,
+                interval_s=sim.interval_s,
+                client_throughput=full.tolist(),
+                app_read_bytes=(core.read.app_bytes
+                                - self._start_read).tolist(),
+                app_write_bytes=(core.write.app_bytes
+                                 - self._start_write).tolist(),
+            )
         series_of = {}
         for shard in self.shards:
             for c, s in zip(shard.clients, shard.series):
@@ -257,21 +296,38 @@ class ShardedRuntime:
                     policy.step_shard(shard.clients, t, dt)
             else:                       # hooks (and fleet oddities): barrier
                 policy(sim.clients, t, dt)
-        plans: Dict[int, object] = {}
-        for shard in self.shards:
-            delay = self.straggler_delay_s.get(shard.sid)
-            if delay:
-                time.sleep(delay)
-            for c, pl in zip(shard.clients,
-                             sim.plan_phase(shard.clients, t, dt)):
-                plans[c.client_id] = pl
-        # barrier: canonical client order into the one shared cluster —
-        # per-OST accumulation is float-order-sensitive
-        fb = sim.resolve_phase([plans[c.client_id] for c in sim.clients], dt)
-        for shard in self.shards:
-            sim.commit_phase(shard.clients,
-                             [plans[c.client_id] for c in shard.clients],
-                             fb, dt)
+        if sim.core is not None:
+            # SoA: one PlanBatch per shard; resolve_phase merges the
+            # shards' demands back into canonical client order by demand
+            # ordinal, so the shared OST queues see the exact
+            # single-process float order
+            batches = []
+            for shard in self.shards:
+                delay = self.straggler_delay_s.get(shard.sid)
+                if delay:
+                    time.sleep(delay)
+                batches.append(sim.plan_phase(shard.clients, t, dt))
+            fb = sim.resolve_phase(batches, dt)
+            for shard, pb in zip(self.shards, batches):
+                sim.commit_phase(shard.clients, pb, fb, dt)
+        else:
+            plans: Dict[int, object] = {}
+            for shard in self.shards:
+                delay = self.straggler_delay_s.get(shard.sid)
+                if delay:
+                    time.sleep(delay)
+                for c, pl in zip(shard.clients,
+                                 sim.plan_phase(shard.clients, t, dt)):
+                    plans[c.client_id] = pl
+            # barrier: canonical client order into the one shared cluster —
+            # per-OST accumulation is float-order-sensitive
+            fb = sim.resolve_phase([plans[c.client_id]
+                                    for c in sim.clients], dt)
+            for shard in self.shards:
+                sim.commit_phase(shard.clients,
+                                 [plans[c.client_id]
+                                  for c in shard.clients],
+                                 fb, dt)
         sim.t += dt
         t = sim.t
         for shard in self.shards:
@@ -373,16 +429,32 @@ class ShardedRuntime:
                 for kind, policy in self._workload:
                     policy.step_shard(shard.clients, t, dt)
                 plans = sim.plan_phase(shard.clients, t, dt)
-                demands = [d for pl in plans for d in pl.all_demands()]
-                self.bus.publish("demand", shard.sid, shard.interval,
-                                 demands, retain=True)
-                echoes = self.bus.latest(
-                    "demand", now=shard.interval,
-                    max_staleness=self.max_staleness,
-                    exclude_shard=shard.sid)
-                echo = [d for m in sorted(echoes, key=lambda m: str(m.shard))
-                        for d in m.payload]
-                fb = shard.cluster.resolve(demands + echo, dt)
+                if sim.core is not None:
+                    own = plans.demand_batch()
+                    self.bus.publish("demand", shard.sid, shard.interval,
+                                     own, retain=True)
+                    echoes = self.bus.latest(
+                        "demand", now=shard.interval,
+                        max_staleness=self.max_staleness,
+                        exclude_shard=shard.sid)
+                    echo = [m.payload for m in
+                            sorted(echoes, key=lambda m: str(m.shard))]
+                    # concat (not merge): own demands first, echoes after,
+                    # matching the scalar `demands + echo` arrival order
+                    fb = shard.cluster.resolve_batch(
+                        DemandBatch.concat([own] + echo), dt)
+                else:
+                    demands = [d for pl in plans for d in pl.all_demands()]
+                    self.bus.publish("demand", shard.sid, shard.interval,
+                                     demands, retain=True)
+                    echoes = self.bus.latest(
+                        "demand", now=shard.interval,
+                        max_staleness=self.max_staleness,
+                        exclude_shard=shard.sid)
+                    echo = [d for m in
+                            sorted(echoes, key=lambda m: str(m.shard))
+                            for d in m.payload]
+                    fb = shard.cluster.resolve(demands + echo, dt)
                 sim.commit_phase(shard.clients, plans, fb, dt)
                 shard.t += dt
                 shard.interval += 1

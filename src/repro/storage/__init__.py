@@ -16,8 +16,10 @@ from repro.storage.params import PFSParams, PAGE_SIZE
 from repro.storage.workloads import (WorkloadSpec, WORKLOADS, get_workload,
                                      idle_workload)
 from repro.storage.client import IOClient, ClientConfig
-from repro.storage.pfs import PFSCluster
+from repro.storage.pfs import ClusterFeedback, PFSCluster
 from repro.storage.sim import SchedulePolicy, Simulation, SimResult
+from repro.storage.soa import (DemandBatch, PlanBatch, SoAClientView,
+                               SoACore, resolve_xp)
 from repro.storage.replay import (Trace, TraceRecord, WorkloadSchedule,
                                   SchedulePhase, parse_trace, render_trace,
                                   load_trace, bundled_traces,
@@ -28,8 +30,10 @@ from repro.storage.replay import (Trace, TraceRecord, WorkloadSchedule,
 
 __all__ = [
     "PFSParams", "PAGE_SIZE", "WorkloadSpec", "WORKLOADS", "get_workload",
-    "idle_workload", "IOClient", "ClientConfig", "PFSCluster", "Simulation",
-    "SimResult", "SchedulePolicy", "Trace", "TraceRecord", "WorkloadSchedule", "SchedulePhase",
+    "idle_workload", "IOClient", "ClientConfig", "PFSCluster",
+    "ClusterFeedback", "Simulation", "SimResult", "SchedulePolicy",
+    "SoACore", "SoAClientView", "PlanBatch", "DemandBatch", "resolve_xp",
+    "Trace", "TraceRecord", "WorkloadSchedule", "SchedulePhase",
     "parse_trace", "render_trace", "load_trace", "bundled_traces",
     "load_bundled_trace", "compile_trace", "segment_phases",
     "schedule_from_names", "simulation_from_schedules",

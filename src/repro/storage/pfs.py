@@ -16,10 +16,12 @@ Resolves the coupling between all clients each interval:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.storage.client import ChannelDemand
-from repro.storage.params import PFSParams
+from repro.storage.params import PAGE_SIZE, PFSParams
 from repro.utils.rng import RngStream
 
 
@@ -36,6 +38,35 @@ class OSTState:
 class ClusterFeedback:
     scale: Dict[int, float] = field(default_factory=dict)     # per-OST
     waits: Dict[int, float] = field(default_factory=dict)     # per-OST
+    # dense twins of the dicts (index = OST id), filled by resolve_batch
+    # so SoA commits never round-trip through Python dicts
+    scale_arr: Optional[np.ndarray] = None
+    waits_arr: Optional[np.ndarray] = None
+
+    def as_arrays(self, n_osts: int):
+        """(scale, waits) as dense arrays regardless of resolve flavor."""
+        if self.scale_arr is not None and self.waits_arr is not None:
+            return self.scale_arr, self.waits_arr
+        scale = np.ones(n_osts)
+        waits = np.zeros(n_osts)
+        for ost, s in self.scale.items():
+            scale[ost] = s
+        for ost, w in self.waits.items():
+            waits[ost] = w
+        return scale, waits
+
+
+def _seq_sum(x: np.ndarray) -> float:
+    """Sum ``x`` in order with left-to-right association.
+
+    ``np.sum`` uses pairwise summation, which reassociates floats;
+    ``cumsum`` is specified as a sequential scan, so its last element is
+    bit-identical to the scalar path's ``sum(...)``/``+=`` loop (a sum
+    starting from 0.0 is exact: ``0.0 + x == x`` for finite x >= 0).
+    """
+    if x.shape[0] == 0:
+        return 0.0
+    return float(np.cumsum(x)[-1])
 
 
 class PFSCluster:
@@ -79,7 +110,7 @@ class PFSCluster:
             util = 0.0
             byte_rate = 0.0
             for d in ds:
-                svc = fixed_eff + d.rpc_pages * 4096.0 / disk_bw
+                svc = fixed_eff + d.rpc_pages * PAGE_SIZE / disk_bw
                 util += d.rpc_rate * svc
                 byte_rate += d.byte_rate
             # network ceiling into the OSS counts too
@@ -92,7 +123,7 @@ class PFSCluster:
 
             # queue delay feedback (served load rho after scaling)
             rho = min(util * scale, 0.95)
-            svc_avg = (sum(fixed_eff + d.rpc_pages * 4096.0 / disk_bw
+            svc_avg = (sum(fixed_eff + d.rpc_pages * PAGE_SIZE / disk_bw
                            for d in ds) / len(ds))
             wait_now = min(p.queue_wait_cap_s, svc_avg * rho / max(1 - rho, 0.05))
             if util > 1.0:   # saturated: queue rides the cap
@@ -106,4 +137,81 @@ class PFSCluster:
 
             fb.scale[ost_id] = scale
             fb.waits[ost_id] = ost.wait_s
+        fb.scale_arr, fb.waits_arr = fb.as_arrays(p.n_osts)
+        return fb
+
+    def resolve_batch(self, batch, dt: float) -> ClusterFeedback:
+        """Array-path ``resolve`` over a :class:`~repro.storage.soa.DemandBatch`.
+
+        Bit-identical to :meth:`resolve` fed the same demands in the same
+        order: demands are stably partitioned by OST (scalar grouping
+        preserves arrival order within an OST), every accumulation is a
+        sequential :func:`_seq_sum`, and the lognormal noise draw happens
+        once per *non-empty* OST in ascending id order — exactly the
+        scalar RNG consumption pattern.
+        """
+        p = self.p
+        n_osts = p.n_osts
+        order = np.argsort(batch.ost, kind="stable")
+        ost_s = batch.ost[order]
+        rate_s = batch.rpc_rate[order]
+        pages_s = batch.rpc_pages[order]
+        win_s = batch.window[order]
+        # ChannelDemand.byte_rate association: (rate * pages) * PAGE_SIZE
+        byte_s = (rate_s * pages_s) * PAGE_SIZE
+        counts = np.bincount(ost_s, minlength=n_osts)
+        bounds = np.concatenate([[0], np.cumsum(counts)])
+
+        fb = ClusterFeedback()
+        scale_arr = np.ones(n_osts)
+        waits_arr = np.zeros(n_osts)
+        for ost_id, ost in enumerate(self.osts):
+            lo, hi = int(bounds[ost_id]), int(bounds[ost_id + 1])
+            if lo == hi:
+                ost.wait_s *= 0.25
+                ost.utilization = 0.0
+                ost.inflight = 0.0
+                fb.scale[ost_id] = 1.0
+                fb.waits[ost_id] = ost.wait_s
+                waits_arr[ost_id] = ost.wait_s
+                continue
+
+            noise = float(self.rng.gen.lognormal(0.0, p.noise_sigma))
+
+            inflight_offered = _seq_sum(win_s[lo:hi])
+            over = max(0.0, inflight_offered / p.ost_overload_knee - 1.0)
+            fixed_eff = p.ost_fixed_cpu_s * (1.0 + p.ost_overload_gamma * over)
+
+            qd = max(inflight_offered, 1.0)
+            disk_bw = (p.ost_disk_bw * qd / (qd + p.ssd_qd_half)) / noise
+
+            svc = fixed_eff + pages_s[lo:hi] * PAGE_SIZE / disk_bw
+            util = _seq_sum(rate_s[lo:hi] * svc)
+            byte_rate = _seq_sum(byte_s[lo:hi])
+            util = max(util, byte_rate / p.ost_ingress_bw)
+
+            if util <= 0.95:
+                scale = 1.0
+            else:
+                scale = 0.95 / util
+
+            rho = min(util * scale, 0.95)
+            svc_avg = _seq_sum(svc) / (hi - lo)
+            wait_now = min(p.queue_wait_cap_s,
+                           svc_avg * rho / max(1 - rho, 0.05))
+            if util > 1.0:
+                wait_now = p.queue_wait_cap_s
+            a = p.queue_smoothing
+            ost.wait_s = a * ost.wait_s + (1 - a) * wait_now
+            ost.utilization = util
+            ost.inflight = inflight_offered
+            ost.served_bytes += byte_rate * scale * dt
+            ost.served_rpcs += _seq_sum(rate_s[lo:hi]) * scale * dt
+
+            fb.scale[ost_id] = scale
+            fb.waits[ost_id] = ost.wait_s
+            scale_arr[ost_id] = scale
+            waits_arr[ost_id] = ost.wait_s
+        fb.scale_arr = scale_arr
+        fb.waits_arr = waits_arr
         return fb

@@ -429,6 +429,7 @@ def simulation_from_schedules(
     interval_s: float = 0.5,
     stripe_offsets: Optional[Sequence[int]] = None,
     topology: Optional[Sequence[object]] = None,
+    backend: str = "scalar",
 ) -> Simulation:
     """A Simulation whose clients replay the given phase schedules.
 
@@ -443,7 +444,8 @@ def simulation_from_schedules(
     sim = Simulation(
         [schedules[i].spec_at(0.0) for i in ids],
         params=params, configs=configs, seed=seed, interval_s=interval_s,
-        stripe_offsets=stripe_offsets, topology=topology, client_ids=ids)
+        stripe_offsets=stripe_offsets, topology=topology, client_ids=ids,
+        backend=backend)
     sim.attach_policy(SchedulePolicy({i: schedules[i] for i in ids}))
     return sim
 

@@ -32,9 +32,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
+import numpy as np
+
 from repro.storage.client import ClientConfig, IOClient
 from repro.storage.params import PFSParams
 from repro.storage.pfs import ClusterFeedback, PFSCluster
+from repro.storage.soa import DemandBatch, PlanBatch, SoAClientView, SoACore
 from repro.storage.workloads import WorkloadSpec
 from repro.utils.rng import RngStream
 
@@ -78,6 +81,14 @@ class SchedulePolicy:
     def __init__(self, schedules: Mapping[int, "ScheduleLike"]):
         self.schedules: Dict[int, "ScheduleLike"] = {
             int(cid): sched for cid, sched in schedules.items()}
+        # per-clients-list fast-path state: schedules expose their switch
+        # times (WorkloadSchedule.boundaries), so between boundaries the
+        # per-step work is one vectorized "anything due?" check instead of
+        # len(schedules) spec_at() calls — the difference between replay
+        # being free and replay re-introducing an O(n) interpreter loop
+        # at 100k clients. Schedules without a ``boundaries`` attribute
+        # fall back to being consulted every step (old semantics).
+        self._fast: Dict[object, dict] = {}
 
     def bind(self, sim, client_ids: Optional[Sequence[int]] = None) -> None:
         if client_ids is not None:
@@ -96,20 +107,56 @@ class SchedulePolicy:
         if spec is not client.workload:
             client.set_workload(spec)
 
-    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
-        from repro.core.policies.base import resolve_bound_clients
-        targets = resolve_bound_clients(f"policy {self.name!r}",
-                                        list(self.schedules), clients)
-        for client, sched in zip(targets, self.schedules.values()):
+    def _state_for(self, key: object, clients: Sequence[IOClient],
+                   pairs: List[tuple]) -> dict:
+        st = {"clients": clients, "pairs": pairs,
+              "bounds": [getattr(sched, "boundaries", None)
+                         for _, sched in pairs],
+              # -inf: every client is due on the first step it is seen
+              "next": np.full(len(pairs), -np.inf),
+              "ptr": [0] * len(pairs)}
+        self._fast[key] = st
+        return st
+
+    def _step_due(self, st: dict, t: float) -> None:
+        nxt = st["next"]
+        if not (nxt <= t).any():
+            return
+        pairs, bounds, ptrs = st["pairs"], st["bounds"], st["ptr"]
+        for i in np.nonzero(nxt <= t)[0]:
+            client, sched = pairs[i]
             self._switch(client, sched, t)
+            b = bounds[i]
+            if b is None:
+                continue        # no boundary info: stays due every step
+            ptr = ptrs[i]
+            while ptr < len(b) and b[ptr] <= t:
+                ptr += 1
+            ptrs[i] = ptr
+            nxt[i] = b[ptr] if ptr < len(b) else np.inf
+
+    def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
+        key = ("step", id(clients))
+        st = self._fast.get(key)
+        if st is None or st["clients"] is not clients:
+            from repro.core.policies.base import resolve_bound_clients
+            targets = resolve_bound_clients(f"policy {self.name!r}",
+                                            list(self.schedules), clients)
+            st = self._state_for(key, clients,
+                                 list(zip(targets, self.schedules.values())))
+        self._step_due(st, t)
 
     def step_shard(self, clients: Sequence[IOClient], t: float,
                    dt: float) -> None:
-        by_id = {c.client_id: c for c in clients}
-        for cid, sched in self.schedules.items():
-            client = by_id.get(cid)
-            if client is not None:
-                self._switch(client, sched, t)
+        key = ("shard", id(clients))
+        st = self._fast.get(key)
+        if st is None or st["clients"] is not clients:
+            by_id = {c.client_id: c for c in clients}
+            pairs = [(by_id[cid], sched)
+                     for cid, sched in self.schedules.items()
+                     if cid in by_id]
+            st = self._state_for(key, clients, pairs)
+        self._step_due(st, t)
 
     __call__ = step
 
@@ -144,7 +191,11 @@ class Simulation:
         stripe_offsets: Optional[Sequence[int]] = None,
         topology: Optional[Sequence[object]] = None,
         client_ids: Optional[Sequence[int]] = None,
+        backend: str = "scalar",
     ):
+        if backend not in ("scalar", "soa", "soa-jax"):
+            raise ValueError(f"backend must be 'scalar', 'soa' or "
+                             f"'soa-jax', got {backend!r}")
         if topology is not None:
             topology = list(topology)
             if len(topology) != len(workloads):
@@ -173,17 +224,36 @@ class Simulation:
                                  f"workloads")
             if len(set(ids)) != len(ids):
                 raise ValueError(f"client_ids must be unique, got {ids}")
-        self.clients: List[IOClient] = []
-        for i, (cid, wl) in enumerate(zip(ids, workloads)):
-            cfg = (ClientConfig(**vars(configs[i])) if configs is not None
-                   else ClientConfig())
-            offset = (stripe_offsets[i] if stripe_offsets is not None
-                      else (i * 3) % self.p.n_osts)
-            self.clients.append(IOClient(
-                client_id=cid, params=self.p, workload=wl, config=cfg,
-                rng=self.rng.fork(f"client{cid}"),
-                stripe_offset=offset,
-            ))
+        self.backend = backend
+        own_cfgs = [ClientConfig(**vars(configs[i])) if configs is not None
+                    else ClientConfig() for i in range(len(workloads))]
+        offsets = [stripe_offsets[i] if stripe_offsets is not None
+                   else (i * 3) % self.p.n_osts
+                   for i in range(len(workloads))]
+        if backend == "scalar":
+            self.core: Optional[SoACore] = None
+            self.clients: List[IOClient] = [
+                IOClient(client_id=cid, params=self.p, workload=wl, config=cfg,
+                         rng=self.rng.fork(f"client{cid}"),
+                         stripe_offset=offset)
+                for cid, wl, cfg, offset in zip(ids, workloads, own_cfgs,
+                                                offsets)]
+        else:
+            # one dense array core; clients are thin per-row views with the
+            # IOClient surface, so policies and controllers are unchanged.
+            # (per-client rng forks are skipped: IOClient never draws from
+            # its stream, and RngStream.fork is hash-derived — it consumes
+            # nothing from the parent, so the cluster stream is unaffected)
+            self.core = SoACore(
+                self.p, list(workloads), own_cfgs, ids, offsets,
+                xp=("jax" if backend == "soa-jax" else "numpy"))
+            self.clients = [SoAClientView(self.core, i)
+                            for i in range(len(ids))]
+        self._by_id: Dict[int, IOClient] = {c.client_id: c
+                                            for c in self.clients}
+        self._idx_all = (self.core.idx_all if self.core is not None
+                         else np.arange(len(self.clients), dtype=np.int64))
+        self._idx_cache: Dict[int, tuple] = {}
         # everything that drives clients is a policy on one of two step
         # phases, invoked in attach order within its phase
         self._workload_policies: List[PolicyLike] = []
@@ -191,11 +261,12 @@ class Simulation:
         self.t = 0.0
 
     def client_by_id(self, client_id: int) -> IOClient:
-        for c in self.clients:
-            if c.client_id == client_id:
-                return c
-        raise KeyError(f"no client with id {client_id} (got "
-                       f"{sorted(c.client_id for c in self.clients)})")
+        try:
+            return self._by_id[client_id]
+        except KeyError:
+            raise KeyError(f"no client with id {client_id} (got "
+                           f"{sorted(c.client_id for c in self.clients)})"
+                           ) from None
 
     def attach_policy(self, policy: "PolicyLike",
                       client_ids: Optional[Sequence[int]] = None
@@ -259,23 +330,55 @@ class Simulation:
         return out
 
     # --- shard-steppable interval phases --------------------------------------
+    def _indices_of(self, clients: Sequence[IOClient]) -> np.ndarray:
+        """Core array positions for a client subset (identity-cached, so
+        sharded runtimes that re-pass the same list pay the gather once)."""
+        if clients is self.clients:
+            return self._idx_all
+        key = id(clients)
+        hit = self._idx_cache.get(key)
+        if hit is not None and hit[0] is clients:
+            return hit[1]
+        idx = np.fromiter((c.index for c in clients), dtype=np.int64,
+                          count=len(clients))
+        self._idx_cache[key] = (clients, idx)
+        return idx
+
     def plan_phase(self, clients: Sequence[IOClient], t: float,
-                   dt: float) -> List[object]:
-        """Per-client planning (independent: any client subset, any order)."""
+                   dt: float) -> object:
+        """Per-client planning (independent: any client subset, any order).
+
+        Scalar backend: a list of per-client ``Plan`` objects. SoA
+        backend: one :class:`PlanBatch` covering the subset.
+        """
+        if self.core is not None:
+            return self.core.plan(self._indices_of(clients), t, dt)
         return [c.plan(t, dt, self.p.n_osts) for c in clients]
 
-    def resolve_phase(self, plans: Sequence[object],
-                      dt: float) -> ClusterFeedback:
+    def resolve_phase(self, plans: object, dt: float) -> ClusterFeedback:
         """The globally-coupled phase: all offered demands meet the shared
         OST queues at once. Demand order must be canonical (client list
-        order) — per-OST accumulation is float-order-sensitive."""
+        order) — per-OST accumulation is float-order-sensitive. Accepts
+        one ``PlanBatch``, a sequence of ``PlanBatch`` shards (merged
+        back into canonical order by demand ordinal), or the scalar list
+        of ``Plan`` objects."""
+        if isinstance(plans, PlanBatch):
+            return self.cluster.resolve_batch(plans.demand_batch(), dt)
+        plans = list(plans)
+        if plans and isinstance(plans[0], PlanBatch):
+            batch = DemandBatch.merge([pb.demand_batch() for pb in plans])
+            return self.cluster.resolve_batch(batch, dt)
         demands = [d for pl in plans for d in pl.all_demands()]
         return self.cluster.resolve(demands, dt)
 
     def commit_phase(self, clients: Sequence[IOClient],
-                     plans: Sequence[object], fb: ClusterFeedback,
+                     plans: object, fb: ClusterFeedback,
                      dt: float) -> None:
         """Per-client commit of resolved feedback (independent)."""
+        if isinstance(plans, PlanBatch):
+            scale_arr, waits_arr = fb.as_arrays(self.p.n_osts)
+            self.core.commit(plans, scale_arr, waits_arr, dt)
+            return
         for client, plan in zip(clients, plans):
             client.commit(plan, fb.scale, fb.waits, dt)
 
@@ -296,6 +399,28 @@ class Simulation:
 
     def run(self, duration_s: float) -> SimResult:
         n_steps = int(round(duration_s / self.interval_s))
+        if self.core is not None:
+            # whole-array throughput series: one (n,) column per step off
+            # the SoA cumulative counters — run() adds no per-client loop
+            core = self.core
+            start_read = core.read.app_bytes.copy()
+            start_write = core.write.app_bytes.copy()
+            prev = start_read + start_write
+            cols: List[np.ndarray] = []
+            for _ in range(n_steps):
+                self.step()
+                total = core.read.app_bytes + core.write.app_bytes
+                cols.append((total - prev) / self.interval_s)
+                prev = total
+            series = (np.stack(cols, axis=1) if cols
+                      else np.zeros((core.n, 0)))
+            return SimResult(
+                duration_s=n_steps * self.interval_s,
+                interval_s=self.interval_s,
+                client_throughput=series.tolist(),
+                app_read_bytes=(core.read.app_bytes - start_read).tolist(),
+                app_write_bytes=(core.write.app_bytes - start_write).tolist(),
+            )
         prev_totals = [(c.stats.read.app_bytes + c.stats.write.app_bytes)
                        for c in self.clients]
         start_read = [c.stats.read.app_bytes for c in self.clients]

@@ -136,3 +136,60 @@ def test_burst_duty_cycle_gates_activity():
 def test_workload_registry_complete():
     # 24 filebench + 2 dlio + 2 h5bench
     assert len(list(WORKLOADS)) >= 28
+
+
+def test_ost_service_uses_page_size_constant(monkeypatch):
+    """Regression: the OST service-time and byte-rate math hardcoded
+    ``4096.0`` instead of ``params.PAGE_SIZE`` — under a different page
+    size the served bytes must scale with it, and the batch resolver
+    must agree with the scalar one."""
+    import repro.storage.client as client_mod
+    import repro.storage.pfs as pfs_mod
+    from repro.storage.client import ChannelDemand
+    from repro.storage.params import PFSParams
+    from repro.storage.soa import DemandBatch
+    from repro.utils.rng import RngStream
+
+    def set_page(page_size):
+        monkeypatch.setattr(pfs_mod, "PAGE_SIZE", page_size)
+        monkeypatch.setattr(client_mod, "PAGE_SIZE", page_size)
+
+    def demands():
+        return [ChannelDemand(client_id=0, ost=0, op="write",
+                              rpc_rate=50.0, rpc_pages=64.0, window=4.0),
+                ChannelDemand(client_id=1, ost=0, op="read",
+                              rpc_rate=30.0, rpc_pages=16.0, window=2.0)]
+
+    def served(page_size):
+        set_page(page_size)
+        cluster = pfs_mod.PFSCluster(PFSParams(n_osts=1, noise_sigma=0.0),
+                                     RngStream(0, "t"))
+        cluster.resolve(demands(), dt=0.5)
+        return cluster.osts[0].served_bytes, cluster.osts[0].utilization
+
+    bytes_4k, util_4k = served(4096.0)
+    bytes_8k, util_8k = served(8192.0)
+    assert bytes_8k != bytes_4k          # page size must reach the math
+    assert util_8k > util_4k             # bigger pages -> more disk time
+
+    # scalar and batch resolvers agree under the non-default page size
+    set_page(8192.0)
+    p = PFSParams(n_osts=2, noise_sigma=0.0)
+    ca = pfs_mod.PFSCluster(p, RngStream(1, "t"))
+    cb = pfs_mod.PFSCluster(p, RngStream(1, "t"))
+    ds = demands() + [ChannelDemand(client_id=2, ost=1, op="write",
+                                    rpc_rate=10.0, rpc_pages=256.0,
+                                    window=8.0)]
+    fa = ca.resolve(ds, dt=0.5)
+    batch = DemandBatch(
+        ost=np.array([d.ost for d in ds], dtype=np.int64),
+        rpc_rate=np.array([d.rpc_rate for d in ds]),
+        rpc_pages=np.array([d.rpc_pages for d in ds]),
+        window=np.array([d.window for d in ds]),
+        ordinal=np.arange(len(ds), dtype=np.int64))
+    fb = cb.resolve_batch(batch, dt=0.5)
+    assert fa.waits == fb.waits
+    assert fa.scale == fb.scale
+    for oa, ob in zip(ca.osts, cb.osts):
+        assert oa.served_bytes == ob.served_bytes
+        assert oa.utilization == ob.utilization
