@@ -1,0 +1,130 @@
+"""Perf-trend guard: diff fresh ``BENCH_*.json`` timings against the
+committed baselines.
+
+Every gating benchmark writes its raw numbers to a ``BENCH_<name>.json``
+report, and the passing reports are committed alongside the code. After
+a bench run overwrites them in the working tree, this tool pulls the
+committed copy (``git show HEAD:BENCH_<name>.json``) and compares every
+metric-valued field, flattened through nested dicts and lists: keys
+like ``ms_*``/``*_ms``/``us_*``/``*_us`` are timings (lower is
+better), ``*_per_s`` are throughputs (higher is better).
+
+* a metric more than ``--threshold`` (default 20%) *worse* than its
+  committed baseline prints a ``WARN`` line;
+* everything else prints as an informational row.
+
+Warn-only by default (exit 0 — CI boxes are noisy and the hard perf
+gates live in the benches themselves); ``--strict`` exits 1 when any
+regression crosses the threshold. Baselines absent from HEAD (a brand
+new bench) and sub-threshold timings (< 1 ms, pure noise) are skipped.
+
+Usage:
+    python benchmarks/perf_trend.py [--threshold 0.2] [--strict] [files...]
+"""
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+MIN_BASELINE_MS = 1.0      # ignore sub-ms timings: scheduler noise
+
+
+def _metric_kind(key: str):
+    """'time' (lower is better), 'rate' (higher is better), or None."""
+    k = key.lower()
+    if (k.startswith("ms_") or k.endswith("_ms")
+            or k.startswith("us_") or k.endswith("_us")):
+        return "time"
+    if k.endswith("_per_s"):
+        return "rate"
+    return None
+
+
+def _flatten(obj, prefix=""):
+    """Yield (dotted_path, kind, value) for every metric-keyed number."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                yield from _flatten(v, path)
+            elif isinstance(v, (int, float)):
+                kind = _metric_kind(str(k))
+                if kind is not None:
+                    yield path, kind, float(v)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _flatten(v, f"{prefix}[{i}]")
+
+
+def _baseline(path: str):
+    """The committed copy of ``path`` at HEAD, or None if absent."""
+    rel = os.path.relpath(path)
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"], capture_output=True,
+            text=True, check=True)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def compare(path: str, threshold: float):
+    """Return (rows, regressions) for one report file."""
+    base = _baseline(path)
+    if base is None:
+        return [(path, "(no committed baseline — skipped)", None)], []
+    with open(path) as f:
+        cur = json.load(f)
+    base_t = {k: v for k, _, v in _flatten(base)}
+    rows, regressions = [], []
+    for key, kind, now in _flatten(cur):
+        was = base_t.get(key)
+        if was is None or (kind == "time" and was < MIN_BASELINE_MS):
+            continue
+        # normalize so ratio > 1 always means "got worse"
+        ratio = now / was if kind == "time" else was / max(now, 1e-30)
+        rows.append((f"{path}:{key}", f"{was:.4g} -> {now:.4g} "
+                     f"({ratio - 1.0:+.1%} vs baseline)", ratio))
+        if ratio > 1.0 + threshold:
+            regressions.append(
+                f"{path}:{key} regressed {ratio - 1.0:+.0%} "
+                f"({was:.4g} -> {now:.4g})")
+    return rows, regressions
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="report files (default: ./BENCH_*.json)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative slowdown that triggers a warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any regression past the threshold")
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("perf_trend: no BENCH_*.json reports found", file=sys.stderr)
+        return 0
+
+    all_regressions = []
+    for path in files:
+        rows, regressions = compare(path, args.threshold)
+        for name, detail, _ in rows:
+            print(f"{name}: {detail}")
+        all_regressions.extend(regressions)
+
+    for msg in all_regressions:
+        print(f"WARN: {msg}", file=sys.stderr)
+    if all_regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   ablation_tau  tau sweep measuring the GBDT calibration gap
   roofline  per-(arch x shape x mesh) dry-run roofline terms (§Roofline)
   sharded   sharded runtime gates (sync identity + async stragglers)
+  soa_device  device-resident soa-jax fleet gates (fused step speedup,
+            million-client interval, shard->device sync equivalence)
 
 Run a subset with ``python -m benchmarks.run --only fig6,table8``.
 """
@@ -35,6 +37,7 @@ from benchmarks import (
     bench_tuner_ablation,
     bench_roofline,
     bench_sharded,
+    bench_soa_device,
 )
 
 SECTIONS = [
@@ -50,6 +53,7 @@ SECTIONS = [
     ("ablation_tau", bench_tuner_ablation.run_tau_sweep),
     ("roofline", bench_roofline.run),
     ("sharded", bench_sharded.run),
+    ("soa_device", bench_soa_device.run),
 ]
 
 

@@ -49,6 +49,17 @@ whole-array operation, bit-identical to the scalar object loop (gated
 by ``benchmarks/bench_fleet_scale.py``) but >= 20x faster per interval
 at 4096 clients — which is what makes a 100k-client fleet steppable.
 
+Part 8 moves the fleet onto the accelerator (``backend="soa-jax"``,
+``repro.storage.device``): per-client state lives in donated jax arrays
+across intervals and each interval is ONE fused plan+resolve+commit jit
+step — no host round-trip per phase, one compile per channel layout
+(config/workload *value* changes re-upload statics without retracing).
+Tolerance-gated (rtol 1e-9) against the bit-identical ``soa`` backend;
+``ShardedRuntime(..., device_map="auto")`` splits the client axis
+across jax devices. ``benchmarks/bench_soa_device.py`` hard-gates the
+fused step at >= 3x the host soa step at 100k clients and steps a
+million-client fleet per interval under a stated budget.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -265,9 +276,51 @@ def main():
     print(f"100k-client fleet: {ms_big:.0f} ms/interval, "
           f"{moved / 1e12:.1f} TB of application I/O modeled in "
           f"{6 * big.interval_s:.0f} simulated seconds")
-    # a jnp backend shares the interface (backend="soa-jax"), tolerance-
-    # gated rather than bit-gated; see tests/test_soa.py for the forced
-    # multi-device CPU coverage
+    # -- Part 8: device-resident fleet — one fused jit step per interval ----
+    print("\n== Device-resident soa-jax fleet: fused jit stepping ==")
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        print("jax not installed — backend='soa-jax' raises an actionable "
+              "ImportError; scalar/soa run everywhere. Skipping Part 8.")
+        return
+
+    # same constructor switch; per-client state now lives on-device in
+    # donated jax arrays, and sim.step() runs plan+resolve+commit as one
+    # fused jit call (only the per-OST congestion noise draw stays host-side)
+    dev = fleet("soa-jax", 20_000)
+    dev.run(8.0)                        # 16 intervals
+    host = fleet("soa", 20_000)
+    host.run(8.0)
+    a = host.core.read.app_bytes + host.core.write.app_bytes
+    dev.core.ensure_host()              # lazy read-through of device state
+    b = dev.core.read.app_bytes + dev.core.write.app_bytes
+    rel = float(np.max(np.abs(b - a) / np.maximum(np.abs(a), 1.0)))
+    print(f"soa vs soa-jax at 20k clients over 16 intervals: "
+          f"max rel {rel:.1e} (tolerance contract: 1e-9 — XLA "
+          f"reassociates the channel/OST sums), "
+          f"jit traces = {dev.device_fleet.n_traces} (compile once, "
+          f"re-step forever)")
+
+    # config mutations mid-run re-upload statics without retracing; only
+    # a channel-layout (stripe-width) change triggers one new trace
+    dev.clients[0].set_rpc_config(64, 4)
+    dev.clients[1].set_cache_limit(16)
+    dev.run(2.0)
+    print(f"after mid-run RPC/cache mutations: jit traces still = "
+          f"{dev.device_fleet.n_traces}")
+
+    ms_host = ms_per_step(fleet("soa", 20_000))
+    ms_dev = ms_per_step(fleet("soa-jax", 20_000))
+    print(f"per-interval step at 20k clients: {ms_host:.1f} ms host soa -> "
+          f"{ms_dev:.1f} ms fused device step "
+          f"({ms_host / max(ms_dev, 1e-9):.1f}x; the gated 100k-client "
+          f"striped-fleet ratio is >= 3x — benchmarks/bench_soa_device.py, "
+          f"which also steps a 1,000,000-client fleet per interval)")
+    # ShardedRuntime(sim, mode="sync", device_map="auto") pins each shard's
+    # slice to its own jax device and merges per-OST demand partials
+    # on-device before the cluster resolve — tests/test_soa_device.py runs
+    # it under xla_force_host_platform_device_count=8
 
 
 if __name__ == "__main__":

@@ -108,9 +108,23 @@ class ShardedRuntime:
         shard_map: Optional[Mapping[object, int]] = None,
         straggler_delay_s: Optional[Mapping[int, float]] = None,
         bus: Optional[TuningBus] = None,
+        device_map: Optional[str] = None,
     ):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        if device_map not in (None, "auto"):
+            raise ValueError(f"device_map must be None or 'auto', "
+                             f"got {device_map!r}")
+        if device_map is not None:
+            if mode != "sync":
+                raise ValueError("device_map requires mode='sync' (async "
+                                 "shards free-run host-side)")
+            if sim.backend != "soa-jax":
+                raise ValueError(f"device_map requires backend='soa-jax', "
+                                 f"got {sim.backend!r}")
+            if straggler_delay_s:
+                raise ValueError("straggler injection targets the host "
+                                 "step loop; not supported with device_map")
         if max_staleness_intervals < 0:
             raise ValueError("max_staleness_intervals must be >= 0")
         if n_shards is not None and shard_map is not None:
@@ -152,6 +166,14 @@ class ShardedRuntime:
                      if sim.core is not None else None)))
         self._shard_of = {c.client_id: s.sid
                           for s in self.shards for c in s.clients}
+        # shard -> device mapping: each shard's client rows live on their
+        # own jax device; demand partials merge on the primary device
+        # before the one shared resolve (storage.device module docstring)
+        self.device_fleet = None
+        if device_map is not None:
+            from repro.storage.device import ShardedDeviceFleet
+            self.device_fleet = ShardedDeviceFleet(
+                sim.core, sim.cluster, [s.idx for s in self.shards])
         bad = [sid for sid in self.straggler_delay_s
                if sid not in {s.sid for s in self.shards}]
         if bad:
@@ -202,6 +224,7 @@ class ShardedRuntime:
         if core is not None:
             # whole-array accounting off the SoA cumulative counters —
             # no per-client Python loop at fleet scale
+            core.ensure_host()
             self._start_read = core.read.app_bytes.copy()
             self._start_write = core.write.app_bytes.copy()
             total = core.read.app_bytes + core.write.app_bytes
@@ -220,7 +243,14 @@ class ShardedRuntime:
     def _record_interval(self, shard: Shard) -> None:
         dt = self.sim.interval_s
         core = self.sim.core
-        if core is not None:
+        if self.device_fleet is not None and \
+                core is not None and core._device is self.device_fleet:
+            # device mode: series from the fused step's per-shard totals
+            # (one small device->host pull per shard-interval)
+            total = np.asarray(self._device_totals[shard.sid])
+            shard.series.append((total - shard._prev) / dt)
+            shard._prev = total
+        elif core is not None:
             total = (core.read.app_bytes + core.write.app_bytes)[shard.idx]
             shard.series.append((total - shard._prev) / dt)
             shard._prev = total
@@ -235,6 +265,7 @@ class ShardedRuntime:
         sim = self.sim
         core = sim.core
         if core is not None:
+            core.ensure_host()
             full = np.zeros((core.n, n_steps))
             for shard in self.shards:
                 if shard.series:
@@ -296,7 +327,15 @@ class ShardedRuntime:
                     policy.step_shard(shard.clients, t, dt)
             else:                       # hooks (and fleet oddities): barrier
                 policy(sim.clients, t, dt)
-        if sim.core is not None:
+        if self.device_fleet is not None:
+            # shard -> device: per-shard plan jits, partials merged on
+            # the primary device, one resolve, shard-local commits.
+            # Throughput accounting comes off the returned per-shard
+            # totals, so no per-interval fleet-state pull happens.
+            totals = self.device_fleet.step(t, dt)
+            self._device_totals = {sh.sid: tot
+                                   for sh, tot in zip(self.shards, totals)}
+        elif sim.core is not None:
             # SoA: one PlanBatch per shard; resolve_phase merges the
             # shards' demands back into canonical client order by demand
             # ordinal, so the shared OST queues see the exact

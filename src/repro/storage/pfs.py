@@ -12,11 +12,18 @@ Resolves the coupling between all clients each interval:
   cost inflates, modeling server thrash under bursty high-concurrency
   traffic (§II-A b). This is what makes *trimming* in-flight concurrency
   under contention a winning move, as CARAT does in §IV-H.
+
+OST state is held as dense ``(n_osts,)`` arrays (``PFSCluster.wait_s``
+and friends); ``PFSCluster.osts`` is a per-OST view surface over them.
+:meth:`PFSCluster.resolve_batch` is fully vectorized — one segment
+reduction per accumulated quantity over stably-sorted OST ids, with the
+per-OST *sequential* float association preserved exactly (see
+:class:`_SegmentFold`), so the ``soa`` backend stays bit-identical to
+the scalar oracle with no per-OST Python loop on the hot path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
@@ -24,74 +31,150 @@ from repro.storage.client import ChannelDemand
 from repro.storage.params import PAGE_SIZE, PFSParams
 from repro.utils.rng import RngStream
 
+# (cluster array field, OSTState attribute) — one (n_osts,) array each
+OST_FIELDS = ("wait_s", "utilization", "inflight", "served_bytes",
+              "served_rpcs")
 
-@dataclass
+
 class OSTState:
-    wait_s: float = 0.0           # smoothed queue delay clients observe
-    utilization: float = 0.0      # offered / capacity last interval
-    inflight: float = 0.0         # concurrent RPCs offered last interval
-    served_bytes: float = 0.0     # cumulative
-    served_rpcs: float = 0.0      # cumulative
+    """Read/write view of one OST's row in the cluster state arrays."""
+
+    __slots__ = ("_c", "_i")
+
+    def __init__(self, cluster: "PFSCluster", i: int):
+        self._c = cluster
+        self._i = i
 
 
-@dataclass
+for _f in OST_FIELDS:
+    def _get(self, _f=_f):
+        return float(getattr(self._c, _f)[self._i])
+
+    def _set(self, v, _f=_f):
+        getattr(self._c, _f)[self._i] = v
+
+    setattr(OSTState, _f, property(_get, _set))
+del _f
+
+
 class ClusterFeedback:
-    scale: Dict[int, float] = field(default_factory=dict)     # per-OST
-    waits: Dict[int, float] = field(default_factory=dict)     # per-OST
-    # dense twins of the dicts (index = OST id), filled by resolve_batch
-    # so SoA commits never round-trip through Python dicts
-    scale_arr: Optional[np.ndarray] = None
-    waits_arr: Optional[np.ndarray] = None
+    """Per-OST resolve outputs. The dense arrays are primary — resolve
+    fills them directly — and the id-keyed dict views (what the scalar
+    ``IOClient.commit`` consumes) derive lazily from them, so the hot
+    array-backend path never materializes a dict per interval."""
+
+    __slots__ = ("scale_arr", "waits_arr", "_scale", "_waits")
+
+    def __init__(self, scale_arr: np.ndarray, waits_arr: np.ndarray):
+        self.scale_arr = scale_arr
+        self.waits_arr = waits_arr
+        self._scale: Dict[int, float] | None = None
+        self._waits: Dict[int, float] | None = None
+
+    @property
+    def scale(self) -> Dict[int, float]:
+        if self._scale is None:
+            self._scale = {i: float(v) for i, v in enumerate(self.scale_arr)}
+        return self._scale
+
+    @property
+    def waits(self) -> Dict[int, float]:
+        if self._waits is None:
+            self._waits = {i: float(v) for i, v in enumerate(self.waits_arr)}
+        return self._waits
 
     def as_arrays(self, n_osts: int):
-        """(scale, waits) as dense arrays regardless of resolve flavor."""
-        if self.scale_arr is not None and self.waits_arr is not None:
-            return self.scale_arr, self.waits_arr
-        scale = np.ones(n_osts)
-        waits = np.zeros(n_osts)
-        for ost, s in self.scale.items():
-            scale[ost] = s
-        for ost, w in self.waits.items():
-            waits[ost] = w
-        return scale, waits
+        """(scale, waits) as dense arrays (kept for interface compat —
+        they are now always populated at construction)."""
+        return self.scale_arr, self.waits_arr
 
 
-def _seq_sum(x: np.ndarray) -> float:
-    """Sum ``x`` in order with left-to-right association.
+class _SegmentFold:
+    """Exact per-OST *sequential* sums over stably-sorted demand columns.
 
-    ``np.sum`` uses pairwise summation, which reassociates floats;
-    ``cumsum`` is specified as a sequential scan, so its last element is
-    bit-identical to the scalar path's ``sum(...)``/``+=`` loop (a sum
-    starting from 0.0 is exact: ``0.0 + x == x`` for finite x >= 0).
+    The scalar resolver accumulates each OST's demands with a
+    left-to-right ``+=`` loop; ``np.sum``/``np.add.reduceat`` reassociate
+    floats (pairwise summation), so they cannot reproduce it bitwise.
+    Instead each column is scattered into a dense ``(n_osts, kmax)``
+    row-per-OST layout (demands left-aligned in arrival order) and
+    reduced with one ``np.cumsum`` along the row axis — cumsum is a
+    sequential scan, so the value at each segment's last filled slot is
+    the exact left-fold sum. A sum starting from 0.0 is exact
+    (``0.0 + x == x`` for finite ``x``), and trailing zero padding sits
+    after the read-out slot, so padding never perturbs identity.
     """
-    if x.shape[0] == 0:
-        return 0.0
-    return float(np.cumsum(x)[-1])
+
+    def __init__(self, ost_s: np.ndarray, counts: np.ndarray):
+        self.n_osts = counts.shape[0]
+        self.counts = counts
+        d = ost_s.shape[0]
+        self.kmax = int(counts.max()) if d else 0
+        if d:
+            lo = np.concatenate([[0], np.cumsum(counts[:-1])])
+            self.row = ost_s
+            self.col = np.arange(d, dtype=np.int64) - lo[ost_s]
+        self.rows = np.arange(self.n_osts)
+        self.last = np.maximum(counts - 1, 0)
+
+    def sums(self, *cols: np.ndarray) -> List[np.ndarray]:
+        if self.kmax == 0:
+            return [np.zeros(self.n_osts) for _ in cols]
+        m = np.zeros((len(cols), self.n_osts, self.kmax))
+        for ci, c in enumerate(cols):
+            m[ci, self.row, self.col] = c
+        # empty segments read slot 0, which stays 0.0 — no masking needed
+        res = np.cumsum(m, axis=2)[:, self.rows, self.last]
+        return list(res)
 
 
 class PFSCluster:
     def __init__(self, params: PFSParams, rng: RngStream | None = None):
         self.p = params
         self.rng = rng or RngStream(0, "pfs")
-        self.osts: List[OSTState] = [OSTState() for _ in range(params.n_osts)]
+        n = params.n_osts
+        self.wait_s = np.zeros(n)        # smoothed queue delay clients observe
+        self.utilization = np.zeros(n)   # offered / capacity last interval
+        self.inflight = np.zeros(n)      # concurrent RPCs offered last interval
+        self.served_bytes = np.zeros(n)  # cumulative
+        self.served_rpcs = np.zeros(n)   # cumulative
+        self._views: List[OSTState] | None = None
+
+    @property
+    def osts(self) -> List[OSTState]:
+        """Per-OST view surface over the dense state arrays."""
+        if self._views is None:
+            self._views = [OSTState(self, i) for i in range(self.p.n_osts)]
+        return self._views
+
+    def _noise_for(self, nonempty: np.ndarray) -> np.ndarray:
+        """One lognormal draw per non-empty OST in ascending id order.
+
+        A batched ``Generator`` draw of size k consumes the bit stream
+        exactly like k sequential scalar draws, so array and scalar
+        resolvers stay on the same RNG trajectory.
+        """
+        noise = np.ones(self.p.n_osts)
+        k = int(np.count_nonzero(nonempty))
+        if k:
+            noise[nonempty] = self.rng.gen.lognormal(
+                0.0, self.p.noise_sigma, size=k)
+        return noise
 
     def resolve(self, demands: List[ChannelDemand], dt: float) -> ClusterFeedback:
         p = self.p
-        fb = ClusterFeedback()
+        scale_arr = np.ones(p.n_osts)
         # group demands per OST
         by_ost: Dict[int, List[ChannelDemand]] = {}
         for d in demands:
             by_ost.setdefault(d.ost, []).append(d)
 
-        for ost_id, ost in enumerate(self.osts):
+        for ost_id in range(p.n_osts):
             ds = by_ost.get(ost_id, [])
             if not ds:
                 # idle: queue drains, wait decays
-                ost.wait_s *= 0.25
-                ost.utilization = 0.0
-                ost.inflight = 0.0
-                fb.scale[ost_id] = 1.0
-                fb.waits[ost_id] = ost.wait_s
+                self.wait_s[ost_id] *= 0.25
+                self.utilization[ost_id] = 0.0
+                self.inflight[ost_id] = 0.0
                 continue
 
             noise = float(self.rng.gen.lognormal(0.0, p.noise_sigma))
@@ -129,26 +212,26 @@ class PFSCluster:
             if util > 1.0:   # saturated: queue rides the cap
                 wait_now = p.queue_wait_cap_s
             a = p.queue_smoothing
-            ost.wait_s = a * ost.wait_s + (1 - a) * wait_now
-            ost.utilization = util
-            ost.inflight = inflight_offered
-            ost.served_bytes += byte_rate * scale * dt
-            ost.served_rpcs += sum(d.rpc_rate for d in ds) * scale * dt
+            self.wait_s[ost_id] = a * self.wait_s[ost_id] + (1 - a) * wait_now
+            self.utilization[ost_id] = util
+            self.inflight[ost_id] = inflight_offered
+            self.served_bytes[ost_id] += byte_rate * scale * dt
+            self.served_rpcs[ost_id] += sum(d.rpc_rate for d in ds) * scale * dt
 
-            fb.scale[ost_id] = scale
-            fb.waits[ost_id] = ost.wait_s
-        fb.scale_arr, fb.waits_arr = fb.as_arrays(p.n_osts)
-        return fb
+            scale_arr[ost_id] = scale
+        return ClusterFeedback(scale_arr, self.wait_s.copy())
 
     def resolve_batch(self, batch, dt: float) -> ClusterFeedback:
         """Array-path ``resolve`` over a :class:`~repro.storage.soa.DemandBatch`.
 
         Bit-identical to :meth:`resolve` fed the same demands in the same
-        order: demands are stably partitioned by OST (scalar grouping
-        preserves arrival order within an OST), every accumulation is a
-        sequential :func:`_seq_sum`, and the lognormal noise draw happens
-        once per *non-empty* OST in ascending id order — exactly the
-        scalar RNG consumption pattern.
+        order, with no per-OST Python loop: demands are stably partitioned
+        by OST (scalar grouping preserves arrival order within an OST),
+        every order-sensitive accumulation is a :class:`_SegmentFold`
+        sequential segment sum, the idle-wait decay is one masked array
+        op, and the lognormal noise is one batched draw covering the
+        non-empty OSTs in ascending id order — exactly the scalar RNG
+        consumption pattern.
         """
         p = self.p
         n_osts = p.n_osts
@@ -160,58 +243,39 @@ class PFSCluster:
         # ChannelDemand.byte_rate association: (rate * pages) * PAGE_SIZE
         byte_s = (rate_s * pages_s) * PAGE_SIZE
         counts = np.bincount(ost_s, minlength=n_osts)
-        bounds = np.concatenate([[0], np.cumsum(counts)])
+        nonempty = counts > 0
+        noise = self._noise_for(nonempty)
 
-        fb = ClusterFeedback()
-        scale_arr = np.ones(n_osts)
-        waits_arr = np.zeros(n_osts)
-        for ost_id, ost in enumerate(self.osts):
-            lo, hi = int(bounds[ost_id]), int(bounds[ost_id + 1])
-            if lo == hi:
-                ost.wait_s *= 0.25
-                ost.utilization = 0.0
-                ost.inflight = 0.0
-                fb.scale[ost_id] = 1.0
-                fb.waits[ost_id] = ost.wait_s
-                waits_arr[ost_id] = ost.wait_s
-                continue
+        seg = _SegmentFold(ost_s, counts)
+        (inflight_offered,) = seg.sums(win_s)
+        over = np.maximum(0.0, inflight_offered / p.ost_overload_knee - 1.0)
+        fixed_eff = p.ost_fixed_cpu_s * (1.0 + p.ost_overload_gamma * over)
 
-            noise = float(self.rng.gen.lognormal(0.0, p.noise_sigma))
+        qd = np.maximum(inflight_offered, 1.0)
+        disk_bw = (p.ost_disk_bw * qd / (qd + p.ssd_qd_half)) / noise
 
-            inflight_offered = _seq_sum(win_s[lo:hi])
-            over = max(0.0, inflight_offered / p.ost_overload_knee - 1.0)
-            fixed_eff = p.ost_fixed_cpu_s * (1.0 + p.ost_overload_gamma * over)
+        svc = fixed_eff[ost_s] + pages_s * PAGE_SIZE / disk_bw[ost_s]
+        util, byte_rate, svc_sum, rate_sum = seg.sums(
+            rate_s * svc, byte_s, svc, rate_s)
+        util = np.maximum(util, byte_rate / p.ost_ingress_bw)
+        # the util=0 lanes (empty OSTs) only feed the discarded where-branch
+        with np.errstate(divide="ignore"):
+            scale = np.where(util <= 0.95, 1.0, 0.95 / util)
 
-            qd = max(inflight_offered, 1.0)
-            disk_bw = (p.ost_disk_bw * qd / (qd + p.ssd_qd_half)) / noise
+        rho = np.minimum(util * scale, 0.95)
+        svc_avg = svc_sum / np.maximum(counts, 1)
+        wait_now = np.minimum(p.queue_wait_cap_s,
+                              svc_avg * rho / np.maximum(1.0 - rho, 0.05))
+        wait_now = np.where(util > 1.0, p.queue_wait_cap_s, wait_now)
+        a = p.queue_smoothing
+        self.wait_s = np.where(nonempty,
+                               a * self.wait_s + (1 - a) * wait_now,
+                               self.wait_s * 0.25)
+        self.utilization = np.where(nonempty, util, 0.0)
+        self.inflight = np.where(nonempty, inflight_offered, 0.0)
+        # empty OSTs contribute exact +0.0 terms (byte/rate sums are 0)
+        self.served_bytes = self.served_bytes + (byte_rate * scale) * dt
+        self.served_rpcs = self.served_rpcs + (rate_sum * scale) * dt
 
-            svc = fixed_eff + pages_s[lo:hi] * PAGE_SIZE / disk_bw
-            util = _seq_sum(rate_s[lo:hi] * svc)
-            byte_rate = _seq_sum(byte_s[lo:hi])
-            util = max(util, byte_rate / p.ost_ingress_bw)
-
-            if util <= 0.95:
-                scale = 1.0
-            else:
-                scale = 0.95 / util
-
-            rho = min(util * scale, 0.95)
-            svc_avg = _seq_sum(svc) / (hi - lo)
-            wait_now = min(p.queue_wait_cap_s,
-                           svc_avg * rho / max(1 - rho, 0.05))
-            if util > 1.0:
-                wait_now = p.queue_wait_cap_s
-            a = p.queue_smoothing
-            ost.wait_s = a * ost.wait_s + (1 - a) * wait_now
-            ost.utilization = util
-            ost.inflight = inflight_offered
-            ost.served_bytes += byte_rate * scale * dt
-            ost.served_rpcs += _seq_sum(rate_s[lo:hi]) * scale * dt
-
-            fb.scale[ost_id] = scale
-            fb.waits[ost_id] = ost.wait_s
-            scale_arr[ost_id] = scale
-            waits_arr[ost_id] = ost.wait_s
-        fb.scale_arr = scale_arr
-        fb.waits_arr = waits_arr
-        return fb
+        return ClusterFeedback(np.where(nonempty, scale, 1.0),
+                               self.wait_s.copy())

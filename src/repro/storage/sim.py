@@ -249,6 +249,14 @@ class Simulation:
                 xp=("jax" if backend == "soa-jax" else "numpy"))
             self.clients = [SoAClientView(self.core, i)
                             for i in range(len(ids))]
+        # soa-jax: fleet state lives on-device across intervals, stepped
+        # by one fused jit (storage.device). Host-side phase methods stay
+        # available (ShardedRuntime) — SoACore's ensure_host/host_mutated
+        # hooks keep the two sides coherent.
+        self.device_fleet = None
+        if backend == "soa-jax":
+            from repro.storage.device import DeviceFleet
+            self.device_fleet = DeviceFleet(self.core, self.cluster)
         self._by_id: Dict[int, IOClient] = {c.client_id: c
                                             for c in self.clients}
         self._idx_all = (self.core.idx_all if self.core is not None
@@ -388,9 +396,14 @@ class Simulation:
         # clients do *before* this interval is planned
         for policy in self._workload_policies:
             policy(self.clients, self.t, dt)
-        plans = self.plan_phase(self.clients, self.t, dt)
-        fb = self.resolve_phase(plans, dt)
-        self.commit_phase(self.clients, plans, fb, dt)
+        if self.device_fleet is not None:
+            # fused device step: plan+resolve+commit in one jit, state
+            # stays on-device; host arrays sync lazily on first read
+            self._last_totals = self.device_fleet.step(self.t, dt)
+        else:
+            plans = self.plan_phase(self.clients, self.t, dt)
+            fb = self.resolve_phase(plans, dt)
+            self.commit_phase(self.clients, plans, fb, dt)
         self.t += dt
         # tune-phase policies run after counters update (probe -> tune,
         # Fig 4), in attach order
@@ -399,6 +412,42 @@ class Simulation:
 
     def run(self, duration_s: float) -> SimResult:
         n_steps = int(round(duration_s / self.interval_s))
+        if self.device_fleet is not None:
+            # device-resident run: each fused step returns the (n,)
+            # cumulative app-bytes totals as a device array; the series
+            # materializes host-side once at the end, so no per-step
+            # fleet-state transfer happens (policies that read per-client
+            # stats still trigger their own lazy syncs)
+            core = self.core
+            core.ensure_host()
+            start_read = core.read.app_bytes.copy()
+            start_write = core.write.app_bytes.copy()
+            prev = start_read + start_write
+            raw: List[object] = []
+            for _ in range(n_steps):
+                self.step()
+                if self.device_fleet is self.core._device:
+                    raw.append(self._last_totals)
+                else:
+                    # a host-path phase (e.g. a sharded runtime) took
+                    # ownership mid-run; fall back to host counters
+                    core.ensure_host()
+                    raw.append(core.read.app_bytes + core.write.app_bytes)
+            cols = []
+            for tot in raw:
+                tot = np.asarray(tot)
+                cols.append((tot - prev) / self.interval_s)
+                prev = tot
+            series = (np.stack(cols, axis=1) if cols
+                      else np.zeros((core.n, 0)))
+            core.ensure_host()
+            return SimResult(
+                duration_s=n_steps * self.interval_s,
+                interval_s=self.interval_s,
+                client_throughput=series.tolist(),
+                app_read_bytes=(core.read.app_bytes - start_read).tolist(),
+                app_write_bytes=(core.write.app_bytes - start_write).tolist(),
+            )
         if self.core is not None:
             # whole-array throughput series: one (n,) column per step off
             # the SoA cumulative counters — run() adds no per-client loop

@@ -65,11 +65,24 @@ _PAGE = float(PAGE_SIZE)
 
 
 def resolve_xp(backend: str):
-    """Array namespace for ``backend`` ("numpy" | "jax")."""
+    """Array namespace for ``backend`` ("numpy" | "jax").
+
+    jax is a *soft* dependency of the storage layer: the scalar and
+    ``soa`` backends never import it, and asking for the jax backend
+    without jax installed raises one actionable error instead of a bare
+    ``ModuleNotFoundError`` from deep inside a plan call.
+    """
     if backend == "numpy":
         return np
     if backend == "jax":
-        import jax
+        try:
+            import jax
+        except ImportError as e:
+            raise ImportError(
+                "backend='soa-jax' requires jax, which is not installed. "
+                "Install the accelerator extra (pip install jax) or use "
+                "backend='soa' / backend='scalar', which are NumPy-only."
+            ) from e
 
         # the model is float64 end to end; without x64 every carried
         # state round-trip would truncate
@@ -281,8 +294,36 @@ class SoACore:
         self.idx_all = np.arange(n, dtype=np.int64)
         self._layout_ok = False
         self._static_ok = False
+        # device residency (storage.device.DeviceFleet attaches here):
+        # while a device fleet is stepping, the device arrays are the
+        # source of truth and the host arrays above go stale until
+        # ensure_host() pulls them back. _static_version lets the device
+        # re-upload plan constants only when a setter actually dirtied
+        # them; _wl_version tracks workload mutations (they change the
+        # OST-activity pattern the device step predicts for RNG draws).
+        self._device = None
+        self._static_version = 0
+        self._wl_version = 0
         for i, wl in enumerate(workloads):
             self.set_workload(i, wl)
+
+    # ---------------------------------------------------- device residency
+    def ensure_host(self) -> None:
+        """Pull carried state/counters off the device if they are stale.
+
+        Cheap no-op (one attribute check) without an attached device
+        fleet — every host-side read path calls this.
+        """
+        d = self._device
+        if d is not None and d.host_stale:
+            d.sync_host()
+
+    def host_mutated(self) -> None:
+        """Mark device-held state stale after a host-side state write
+        (the device fleet re-uploads before its next fused step)."""
+        d = self._device
+        if d is not None:
+            d.device_stale = True
 
     # -------------------------------------------------------------- setters
     def set_workload(self, i: int, spec: WorkloadSpec) -> None:
@@ -301,6 +342,7 @@ class SoACore:
         self.wl_period[i] = spec.period_s
         self.wl_stride[i] = float(spec.stride_bytes)
         self._static_ok = False
+        self._wl_version += 1
 
     def set_rpc_config(self, i: int, window_pages: int,
                        in_flight: int) -> None:
@@ -420,6 +462,7 @@ class SoACore:
         s.r_pages = np.where(s.is_rand, p_eff_rd, p_eff_sl)
         self._static = s
         self._static_ok = True
+        self._static_version += 1
 
     def stream_osts(self, i: int, n_osts: int) -> Dict[int, int]:
         """Scalar-compatible placement map for one client (view surface)."""
@@ -438,6 +481,7 @@ class SoACore:
         Passing ``self.idx_all`` (by identity) skips all per-subset
         gathers — the whole-fleet fast path.
         """
+        self.ensure_host()
         self._ensure_static()
         s = self._static
         xp = self.xp
@@ -583,6 +627,8 @@ class SoACore:
         t_rpc uses the *new* waits while the plan used the old), then
         the write commit, then the read commit, then the gauges.
         """
+        self.ensure_host()
+        self.host_mutated()
         self._ensure_static()
         s = self._static
         xp = self.xp
@@ -731,6 +777,7 @@ class SoACore:
     # ------------------------------------------------------------- snapshots
     def materialize_stats(self, i: int) -> ClientStats:
         """A plain ``ClientStats`` deep-copy of client ``i``'s counters."""
+        self.ensure_host()
         return ClientStats(
             read=self.read.materialize(i),
             write=self.write.materialize(i),
@@ -746,17 +793,23 @@ class SoACore:
 class _SoAOpView:
     """Live read-only view of one client's OpCounters row."""
 
-    __slots__ = ("_ops", "_i")
+    __slots__ = ("_core", "_ops", "_i")
 
-    def __init__(self, ops: OpArrays, i: int):
+    def __init__(self, core: SoACore, ops: OpArrays, i: int):
+        self._core = core
         self._ops = ops
         self._i = i
 
 
+def _op_get(self, _f):
+    # counters may live on-device mid-run; pull them back lazily
+    self._core.ensure_host()
+    return float(getattr(self._ops, _f)[self._i])
+
+
 for _f in OP_FIELDS:
     setattr(_SoAOpView, _f,
-            property(lambda self, _f=_f:
-                     float(getattr(self._ops, _f)[self._i])))
+            property(lambda self, _f=_f: _op_get(self, _f)))
 del _f
 
 
@@ -773,19 +826,22 @@ class _SoAStatsView:
     def __init__(self, core: SoACore, i: int):
         self._core = core
         self._i = i
-        self.read = _SoAOpView(core.read, i)
-        self.write = _SoAOpView(core.write, i)
+        self.read = _SoAOpView(core, core.read, i)
+        self.write = _SoAOpView(core, core.write, i)
 
     @property
     def dirty_bytes(self) -> float:
+        self._core.ensure_host()
         return float(self._core.dirty_bytes[self._i])
 
     @property
     def dirty_peak_bytes(self) -> float:
+        self._core.ensure_host()
         return float(self._core.dirty_peak_bytes[self._i])
 
     @property
     def inflight_peak(self) -> float:
+        self._core.ensure_host()
         return float(self._core.inflight_peak[self._i])
 
     @property
@@ -893,14 +949,17 @@ class SoAClientView:
 
     @property
     def dirty_bytes(self) -> float:
+        self.core.ensure_host()
         return float(self.core.dirty_bytes[self.index])
 
     @property
     def last_drain(self) -> float:
+        self.core.ensure_host()
         return float(self.core.last_drain[self.index])
 
     @property
     def last_wait(self) -> Dict[int, float]:
+        self.core.ensure_host()
         row = self.core.waits[self.index]
         return {ost: float(w) for ost, w in enumerate(row)}
 
