@@ -16,11 +16,17 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   soa_device  device-resident soa-jax fleet gates (fused step speedup,
             million-client interval, shard->device sync equivalence)
 
-Run a subset with ``python -m benchmarks.run --only fig6,table8``.
+Tooling sections (repo gates, not paper artifacts):
+  lint      caratlint contract pass over src/tests/benchmarks
+            (hard-fails on findings; catalogue in CONTRIBUTING.md)
+
+Run a subset with ``python -m benchmarks.run --only fig6,table8``;
+``--list`` prints the section names.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -40,6 +46,26 @@ from benchmarks import (
     bench_soa_device,
 )
 
+def run_lint() -> None:
+    """Tooling gate: the caratlint contract pass (CONTRIBUTING.md)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if repo not in sys.path:
+        sys.path.insert(0, repo)
+    from tools.caratlint.baseline import DEFAULT_BASELINE, load_baseline
+    from tools.caratlint.engine import lint_paths
+
+    result = lint_paths(["src", "tests", "benchmarks"], root=repo,
+                        baseline=load_baseline(DEFAULT_BASELINE))
+    for f in result.findings:
+        print(f"# {f.render()}", file=sys.stderr)
+    print(f"caratlint,0,findings={len(result.findings)}"
+          f";files={result.files_scanned}")
+    if result.findings:
+        raise RuntimeError(
+            f"caratlint: {len(result.findings)} contract finding(s) — "
+            f"run `python -m tools.caratlint` for details")
+
+
 SECTIONS = [
     ("table4", bench_model_accuracy.run),
     ("fig6", bench_static.run),
@@ -54,6 +80,8 @@ SECTIONS = [
     ("roofline", bench_roofline.run),
     ("sharded", bench_sharded.run),
     ("soa_device", bench_soa_device.run),
+    # tooling sections: repo gates that ride the same harness
+    ("lint", run_lint),
 ]
 
 
@@ -61,7 +89,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--list", action="store_true",
+                    help="print section names and exit")
     args = ap.parse_args()
+    if args.list:
+        for name, _ in SECTIONS:
+            print(name)
+        return
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

@@ -1,10 +1,32 @@
+"""CARAT's model zoo: GBDT (deployed) plus the paper's baselines.
+
+The jax-backed neural baselines (``nets``) load lazily via PEP 562 so
+that importing the GBDT/SVM/dataset layer — which the scalar/soa tuning
+path pulls in through ``CaratPolicy`` — never executes a module-level
+``import jax``. The soft-dependency contract is enforced statically by
+caratlint rule CL002 (see CONTRIBUTING.md): ``repro.core.policies`` must
+stay importable on jax-less machines, and an eager ``from .nets import``
+here is exactly the parent-package edge that would break it.
+"""
 from repro.core.ml.gbdt import ObliviousGBDT, train_gbdt
 from repro.core.ml.svm import LinearSVM, train_svm
-from repro.core.ml.nets import FCNN, VanillaRNN, TCN, train_net
 from repro.core.ml.dataset import collect_training_data, TrainingData
+
+_NET_EXPORTS = ("FCNN", "VanillaRNN", "TCN", "train_net")
 
 __all__ = [
     "ObliviousGBDT", "train_gbdt", "LinearSVM", "train_svm",
     "FCNN", "VanillaRNN", "TCN", "train_net",
     "collect_training_data", "TrainingData",
 ]
+
+
+def __getattr__(name):
+    if name in _NET_EXPORTS:
+        from repro.core.ml import nets
+        return getattr(nets, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_NET_EXPORTS))

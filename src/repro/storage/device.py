@@ -45,6 +45,11 @@ state writes mark the device copy stale and the next device step
 re-uploads. jax stays a soft dependency — importing this module
 without jax installed raises the same actionable error as
 ``backend="soa-jax"``.
+
+The fused-step promise is lint-enforced: ``caratlint`` rule CL004
+flags host round-trips, Python control flow on traced values, and
+donated-buffer reuse in this module (see ``CONTRIBUTING.md`` for the
+rule catalogue and suppression syntax).
 """
 from __future__ import annotations
 

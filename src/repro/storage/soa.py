@@ -31,6 +31,10 @@ Masked lanes (a client with no write plan this interval) contribute
 exact ``+0.0`` terms, which IEEE-754 addition leaves bit-invariant on
 the non-negative counters, so masking never perturbs identity.
 
+The float-order contract is lint-enforced: ``caratlint`` rule CL003
+flags reassociating reductions and unstable sorts in this module (see
+``CONTRIBUTING.md`` for the rule catalogue and suppression syntax).
+
 Backends: ``xp="numpy"`` (default) or ``xp="jax"`` — the elementwise
 plan/commit math runs through the array namespace while carried state
 stays NumPy (the cluster RNG is NumPy either way). The jax backend
@@ -685,6 +689,7 @@ class SoACore:
                 rpcs = rpcs + a * dt
                 pages_sum = pages_sum + (a * dt) * pages_1d
             # channel_time counts live channels: integer, order-free
+            # caratlint: disable=CL003 (bool-mask count, not a float fold)
             n_live = (valid & (rate_np > 0.0)).sum(axis=1).astype(np.float64)
             return byte_sum, inflight, lat_sum, rpcs, pages_sum, n_live
 

@@ -1,0 +1,266 @@
+"""Tier-1 gate for the caratlint static-analysis pass.
+
+Two halves:
+
+* **self-tests** — each CLxxx rule must fire on every seeded violation
+  in ``tools/caratlint/fixtures/`` (lines carry a ``VIOLATION`` marker
+  comment) and honour the inline ``# caratlint: disable=`` suppressions
+  planted next to them;
+* **repo gate** — the shipped tree lints clean with the committed
+  (empty) baseline, which is exactly what the CI step enforces.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.caratlint import (LintConfig, default_config, lint_paths,  # noqa: E402
+                             RULES)
+from tools.caratlint.baseline import load_baseline, write_baseline  # noqa: E402
+from tools.caratlint.cli import main as cli_main  # noqa: E402
+from tools.caratlint.engine import _parse_suppressions  # noqa: E402
+
+FIXDIR = "tools/caratlint/fixtures"
+
+
+def fixture_config() -> LintConfig:
+    """Ad-hoc config pointing every scoped rule at its fixture file."""
+    return LintConfig(
+        exclude=[],
+        source_roots=[FIXDIR],
+        rule_paths={
+            "CL001": [f"{FIXDIR}/cl001_bad.py"],
+            "CL003": [f"{FIXDIR}/cl003_bad.py"],
+            "CL004": [f"{FIXDIR}/cl004_bad.py"],
+            "CL005": [f"{FIXDIR}/cl005_bad.py"],
+        },
+        cl001_allowed=[],
+        cl002_entries=["cl002_pkg.entry"],
+        cl002_allowed=[],
+    )
+
+
+def marked_lines(relpath: str) -> set:
+    """1-based lines carrying the fixture's ``VIOLATION`` marker."""
+    text = (REPO / relpath).read_text(encoding="utf-8")
+    return {i for i, line in enumerate(text.splitlines(), start=1)
+            if "VIOLATION" in line and not line.lstrip().startswith('"')}
+
+
+def lint_fixture(path: str):
+    return lint_paths([path], config=fixture_config(), root=str(REPO))
+
+
+# ---------------------------------------------------------------- per rule
+@pytest.mark.parametrize("fixture,code,n_suppressed", [
+    (f"{FIXDIR}/cl001_bad.py", "CL001", 2),
+    (f"{FIXDIR}/cl003_bad.py", "CL003", 1),
+    (f"{FIXDIR}/cl004_bad.py", "CL004", 1),
+])
+def test_rule_fires_on_markers_and_respects_suppressions(
+        fixture, code, n_suppressed):
+    result = lint_fixture(fixture)
+    assert {f.code for f in result.findings} == {code}
+    assert {f.line for f in result.findings} == marked_lines(fixture)
+    assert result.suppressed == n_suppressed
+
+
+def test_cl002_walks_import_graph_from_entry():
+    result = lint_fixture(f"{FIXDIR}/cl002_pkg")
+    assert [f.code for f in result.findings] == ["CL002"]
+    (finding,) = result.findings
+    # flagged in the leaf that actually imports jax, with the chain back
+    # to the configured entry module rendered in the message
+    assert finding.path.endswith("leaf_jax.py")
+    assert ("cl002_pkg.leaf_jax <- cl002_pkg.mid <- cl002_pkg.entry"
+            in finding.message)
+    # sibling.py imports jax and IS reachable, but carries a suppression
+    assert result.suppressed == 1
+    # unreachable_jax.py imports jax and is NOT reachable: no finding
+    assert not any(f.path.endswith("unreachable_jax.py")
+                   for f in result.findings)
+
+
+def test_cl002_function_level_import_is_not_an_edge():
+    # mid.py's lazy_ok() imports jax inside a function body; only
+    # leaf_jax (module level) is flagged
+    result = lint_fixture(f"{FIXDIR}/cl002_pkg")
+    assert not any(f.path.endswith("mid.py") for f in result.findings)
+
+
+def test_cl002_allowlist_exempts_module():
+    cfg = fixture_config()
+    cfg.cl002_allowed = ["cl002_pkg.leaf_jax"]
+    result = lint_paths([f"{FIXDIR}/cl002_pkg"], config=cfg,
+                        root=str(REPO))
+    assert result.findings == []
+
+
+def test_cl005_lifecycle_and_registry():
+    result = lint_fixture(f"{FIXDIR}/cl005_bad.py")
+    assert {f.code for f in result.findings} == {"CL005"}
+    msgs = "\n".join(f.message for f in result.findings)
+    # lifecycle violations, anchored at the class statements
+    assert "BadGather" in msgs and "shardwise" in msgs
+    assert "BadFleetStep" in msgs and "bus_decide" in msgs
+    assert "BadPartialReqRep" in msgs and "all-or-nothing" in msgs
+    assert "BadLocalWithBusHooks" in msgs
+    # registry round-trip violations, anchored at the register() calls
+    assert "Misnamed" in msgs
+    assert "NoConfig" in msgs and "config()" in msgs
+    # clean class, clean registration, suppressed class
+    assert "GoodLocal" not in msgs
+    assert "Suppressed" not in msgs
+    assert result.suppressed == 1
+    assert len(result.findings) == 6
+
+
+def test_cl004_flags_every_hygiene_class():
+    result = lint_fixture(f"{FIXDIR}/cl004_bad.py")
+    msgs = [f.message for f in result.findings]
+    assert any("host round-trip" in m for m in msgs)          # .item()
+    assert any("host numpy call" in m for m in msgs)          # np.asarray
+    assert any("forces concretization" in m for m in msgs)    # float()
+    assert any("`if` on a (potentially) traced" in m for m in msgs)
+    assert any("donated" in m for m in msgs)                  # buffer reuse
+
+
+def test_cl004_trace_time_specialization_allowed():
+    # `x is None` tests and np dtype references never produce findings
+    result = lint_fixture(f"{FIXDIR}/cl004_bad.py")
+    for f in result.findings:
+        assert "is None" not in (REPO / f.path).read_text(
+            encoding="utf-8").splitlines()[f.line - 1]
+
+
+# ------------------------------------------------------------ engine bits
+def test_suppression_parser_variants():
+    by_line, whole = _parse_suppressions([
+        "x = 1  # caratlint: disable=CL001",
+        "# caratlint: disable=CL003, CL004",
+        "y = np.sum(z)",
+        "# caratlint: disable-file=CL002",
+        "z = 3  # caratlint: disable=all",
+    ])
+    assert by_line[1] == {"CL001"}
+    # standalone comment line covers itself and the next line
+    assert by_line[2] == {"CL003", "CL004"}
+    assert by_line[3] == {"CL003", "CL004"}
+    assert whole == {"CL002"}
+    assert by_line[5] == {"all"}
+
+
+def test_baseline_budget_covers_n_occurrences(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import random\n"
+                   "a = random.random()\n"
+                   "b = random.random()\n", encoding="utf-8")
+    cfg = LintConfig(exclude=[], source_roots=[], rule_paths={},
+                     cl001_allowed=[], cl002_entries=[])
+    clean = lint_paths([str(bad)], config=cfg, root=str(tmp_path))
+    assert len(clean.findings) == 2
+    fp = clean.findings[0].fingerprint()
+    assert clean.findings[1].fingerprint() == fp   # same message => same fp
+    one = lint_paths([str(bad)], config=cfg, root=str(tmp_path),
+                     baseline=[fp])
+    assert len(one.findings) == 1 and one.baselined == 1
+    both = lint_paths([str(bad)], config=cfg, root=str(tmp_path),
+                      baseline=[fp, fp])
+    assert both.findings == [] and both.baselined == 2
+    assert both.exit_code == 0 and one.exit_code == 1
+
+
+def test_baseline_file_roundtrip_and_validation(tmp_path):
+    path = tmp_path / "baseline.json"
+    assert load_baseline(str(path)) == []          # missing file: empty
+    write_baseline(str(path), ["CL001|a.py|msg", "CL001|a.py|msg"])
+    assert load_baseline(str(path)) == ["CL001|a.py|msg"] * 2
+    path.write_text('{"findings": "nope"}', encoding="utf-8")
+    with pytest.raises(ValueError):
+        load_baseline(str(path))
+
+
+def test_syntax_error_files_are_skipped(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n", encoding="utf-8")
+    (tmp_path / "fine.py").write_text("x = 1\n", encoding="utf-8")
+    cfg = LintConfig(exclude=[], source_roots=[], rule_paths={},
+                     cl002_entries=[])
+    result = lint_paths(["."], config=cfg, root=str(tmp_path))
+    assert result.files_scanned == 1
+    assert result.findings == []
+
+
+# ---------------------------------------------------------------- repo gate
+def test_shipped_tree_lints_clean_with_empty_baseline():
+    """The CI gate, in-process: default config, committed baseline."""
+    baseline = load_baseline(
+        str(REPO / "tools" / "caratlint" / "baseline.json"))
+    assert baseline == [], "the committed baseline must stay empty"
+    result = lint_paths(["src", "tests", "benchmarks"],
+                        config=default_config(), root=str(REPO),
+                        baseline=baseline)
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+    assert result.files_scanned > 100
+
+
+def test_fixtures_are_excluded_from_repo_runs():
+    cfg = default_config()
+    assert cfg.is_excluded(f"{FIXDIR}/cl001_bad.py")
+    result = lint_paths(["tools"], config=cfg, root=str(REPO))
+    assert result.findings == []
+
+
+def test_rule_catalogue_complete():
+    codes = [r.code for r in RULES]
+    assert codes == ["CL001", "CL002", "CL003", "CL004", "CL005"]
+    for rule in RULES:
+        assert rule.name and rule.contract
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    assert cli_main(["--list-rules"]) == 0
+    assert len(capsys.readouterr().out.strip().splitlines()) == len(RULES)
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import random\nx = random.random()\n",
+                   encoding="utf-8")
+    assert cli_main([str(bad), "--no-baseline"]) == 1
+    capsys.readouterr()
+
+    assert cli_main([str(bad), "--no-baseline", "--format", "json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["findings"] and payload["findings"][0]["code"] == "CL001"
+    assert "fingerprint" in payload["findings"][0]
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import random\nx = random.random()\n",
+                   encoding="utf-8")
+    base = tmp_path / "grandfathered.json"
+    assert cli_main([str(bad), "--baseline", str(base),
+                     "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert cli_main([str(bad), "--baseline", str(base)]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+
+def test_cli_module_entrypoint_gates_real_tree():
+    """`python -m tools.caratlint src tests benchmarks` — the exact CI
+    command — exits 0 on the shipped tree."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.caratlint",
+         "src", "tests", "benchmarks"],
+        cwd=str(REPO), capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO)})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout

@@ -1,0 +1,153 @@
+"""Tests for the perf-trend guard (``benchmarks/perf_trend.py``).
+
+Builds a throwaway git repo per test: commit synthetic ``BENCH_*.json``
+baselines at HEAD, overwrite the working copies with drifted numbers,
+and assert on ``compare()`` rows / ``main()`` exit codes.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "perf_trend", REPO / "benchmarks" / "perf_trend.py")
+perf_trend = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_trend)
+
+
+@pytest.fixture
+def bench_repo(tmp_path, monkeypatch):
+    """A git repo with committed BENCH baselines; cwd moved into it."""
+    def run(*argv):
+        subprocess.run(["git", "-C", str(tmp_path), *argv],
+                       check=True, capture_output=True)
+
+    run("init", "-q")
+    run("-c", "user.email=t@t", "-c", "user.name=t",
+        "commit", "-q", "--allow-empty", "-m", "seed")
+    monkeypatch.chdir(tmp_path)
+
+    def commit_baseline(name, payload):
+        path = tmp_path / name
+        path.write_text(json.dumps(payload), encoding="utf-8")
+        run("add", name)
+        run("-c", "user.email=t@t", "-c", "user.name=t",
+            "commit", "-q", "-m", f"baseline {name}")
+        return path
+
+    return tmp_path, commit_baseline
+
+
+def test_metric_kind_classification():
+    assert perf_trend._metric_kind("ms_step") == "time"
+    assert perf_trend._metric_kind("total_ms") == "time"
+    assert perf_trend._metric_kind("us_resolve") == "time"
+    assert perf_trend._metric_kind("lat_us") == "time"
+    assert perf_trend._metric_kind("ops_per_s") == "rate"
+    assert perf_trend._metric_kind("n_clients") is None
+    assert perf_trend._metric_kind("seed") is None
+
+
+def test_flatten_nested_dicts_and_lists():
+    got = list(perf_trend._flatten(
+        {"runs": [{"ms_a": 1.0, "note": "x"}, {"ms_a": 2.0}],
+         "sub": {"ops_per_s": 10}, "count": 5}))
+    assert ("runs[0].ms_a", "time", 1.0) in got
+    assert ("runs[1].ms_a", "time", 2.0) in got
+    assert ("sub.ops_per_s", "rate", 10.0) in got
+    assert all(key != "count" for key, _, _ in got)
+
+
+def test_time_regression_detected(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_step.json", {"ms_step": 10.0})
+    Path("BENCH_step.json").write_text(json.dumps({"ms_step": 15.0}))
+    rows, regressions = perf_trend.compare("BENCH_step.json", 0.2)
+    assert len(regressions) == 1
+    assert "ms_step" in regressions[0] and "+50%" in regressions[0]
+    assert any(ratio and ratio > 1.4 for _, _, ratio in rows)
+
+
+def test_time_improvement_and_under_threshold_pass(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_step.json", {"ms_step": 10.0, "ms_other": 10.0})
+    Path("BENCH_step.json").write_text(
+        json.dumps({"ms_step": 8.0, "ms_other": 11.5}))  # -20%, +15%
+    rows, regressions = perf_trend.compare("BENCH_step.json", 0.2)
+    assert regressions == []
+    assert len(rows) == 2
+
+
+def test_rate_metric_direction_inverted(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_tp.json", {"ops_per_s": 100.0})
+    # throughput halved = regression even though the number went *down*
+    Path("BENCH_tp.json").write_text(json.dumps({"ops_per_s": 50.0}))
+    _, regressions = perf_trend.compare("BENCH_tp.json", 0.2)
+    assert len(regressions) == 1
+    # throughput doubled = improvement
+    Path("BENCH_tp.json").write_text(json.dumps({"ops_per_s": 200.0}))
+    _, regressions = perf_trend.compare("BENCH_tp.json", 0.2)
+    assert regressions == []
+
+
+def test_missing_baseline_is_skipped(bench_repo):
+    tmp_path, _ = bench_repo
+    Path("BENCH_new.json").write_text(json.dumps({"ms_x": 5.0}))
+    rows, regressions = perf_trend.compare("BENCH_new.json", 0.2)
+    assert regressions == []
+    assert "no committed baseline" in rows[0][1]
+
+
+def test_sub_ms_baseline_is_noise(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_tiny.json", {"ms_tiny": 0.4})
+    Path("BENCH_tiny.json").write_text(json.dumps({"ms_tiny": 40.0}))
+    rows, regressions = perf_trend.compare("BENCH_tiny.json", 0.2)
+    assert rows == [] and regressions == []
+
+
+def test_main_warn_only_vs_strict(bench_repo, capsys):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_step.json", {"ms_step": 10.0})
+    Path("BENCH_step.json").write_text(json.dumps({"ms_step": 20.0}))
+    # default: WARN lines but exit 0 (CI boxes are noisy)
+    assert perf_trend.main(["BENCH_step.json"]) == 0
+    assert "WARN" in capsys.readouterr().err
+    # --strict: same regression now gates
+    assert perf_trend.main(["BENCH_step.json", "--strict"]) == 1
+    # a looser threshold lets it pass even under --strict
+    assert perf_trend.main(["BENCH_step.json", "--strict",
+                            "--threshold", "1.5"]) == 0
+
+
+def test_main_globs_reports_and_handles_none(bench_repo, capsys):
+    assert perf_trend.main([]) == 0
+    assert "no BENCH_*.json" in capsys.readouterr().err
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_a.json", {"ms_a": 10.0})
+    commit_baseline("BENCH_b.json", {"ms_b": 10.0})
+    Path("BENCH_a.json").write_text(json.dumps({"ms_a": 10.5}))
+    Path("BENCH_b.json").write_text(json.dumps({"ms_b": 30.0}))
+    assert perf_trend.main(["--strict"]) == 1
+    err = capsys.readouterr().err
+    assert "BENCH_b.json" in err and "BENCH_a.json" not in err
+
+
+def test_corrupt_committed_baseline_is_skipped(bench_repo):
+    _, commit_baseline = bench_repo
+    path = commit_baseline("BENCH_bad.json", {"ms_x": 10.0})
+    # overwrite HEAD copy with garbage via a new commit, then drift
+    path.write_text("not json{")
+    subprocess.run(["git", "-C", str(path.parent), "-c", "user.email=t@t",
+                    "-c", "user.name=t", "commit", "-qam", "corrupt"],
+                   check=True, capture_output=True)
+    path.write_text(json.dumps({"ms_x": 99.0}))
+    rows, regressions = perf_trend.compare("BENCH_bad.json", 0.2)
+    assert regressions == []
+    assert "no committed baseline" in rows[0][1]

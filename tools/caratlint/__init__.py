@@ -1,0 +1,27 @@
+"""caratlint: contract-enforcing static analysis for this repository.
+
+The repo's deployability story rests on invariants that ordinary linters
+cannot see: deterministic RNG consumption, jax-as-soft-dependency on the
+scalar/soa path, the bit-identity float-order contract in the SoA core,
+compile-once/no-host-round-trip discipline inside the fused device step,
+and the split observe/decide/actuate lifecycle of fleet-gathering
+policies. Each invariant is a :class:`~tools.caratlint.rules.base.Rule`
+with a stable ``CLxxx`` code; the engine parses every file once, runs
+the rules, honours inline ``# caratlint: disable=CLxxx`` suppressions
+and a committed baseline of grandfathered findings, and reports in text
+or JSON.
+
+Run it from the repo root::
+
+    python -m tools.caratlint src tests benchmarks
+
+The invariant catalogue (one section per rule: the contract, why it
+exists, how to suppress) lives in ``CONTRIBUTING.md``.
+"""
+from tools.caratlint.config import LintConfig, default_config
+from tools.caratlint.engine import LintResult, lint_paths
+from tools.caratlint.rules import RULES
+from tools.caratlint.rules.base import Finding
+
+__all__ = ["LintConfig", "default_config", "LintResult", "lint_paths",
+           "RULES", "Finding"]

@@ -1,0 +1,5 @@
+import sys
+
+from tools.caratlint.cli import main
+
+sys.exit(main())

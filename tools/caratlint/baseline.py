@@ -1,0 +1,37 @@
+"""Committed baseline of grandfathered findings.
+
+The baseline is a JSON list of finding fingerprints. A fingerprint in
+the baseline silences exactly one matching occurrence, so fixing one of
+two identical findings keeps the other visible the moment the baseline
+is regenerated. The shipped baseline is **empty** — every contract
+violation in the tree was fixed rather than grandfathered — and new
+code should keep it that way; ``--write-baseline`` exists for emergency
+adoption of the linter onto a branch with pre-existing findings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Sequence
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "baseline.json")
+
+
+def load_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "findings" not in data \
+            or not isinstance(data["findings"], list):
+        raise ValueError(f"{path}: expected "
+                         f'{{"version": 1, "findings": [...]}}')
+    return [str(fp) for fp in data["findings"]]
+
+
+def write_baseline(path: str, fingerprints: Sequence[str]) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"version": 1, "findings": sorted(fingerprints)},
+                  f, indent=2)
+        f.write("\n")

@@ -1,0 +1,93 @@
+"""Command-line front end: ``python -m tools.caratlint src tests``.
+
+Exit codes: 0 clean, 1 findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from tools.caratlint.baseline import (DEFAULT_BASELINE, load_baseline,
+                                      write_baseline)
+from tools.caratlint.config import default_config
+from tools.caratlint.engine import lint_paths
+from tools.caratlint.rules import RULES
+
+
+def _repo_root() -> str:
+    """The directory `tools/` lives in — the lint root for the default
+    config's relative scopes, wherever the CLI is invoked from."""
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="caratlint",
+        description="contract-enforcing static analysis for this repo "
+                    "(rule catalogue: CONTRIBUTING.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src "
+                         "tests benchmarks)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and "
+                         "exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.code} {rule.name}: {rule.contract}")
+        return 0
+
+    paths = args.paths or ["src", "tests", "benchmarks"]
+    root = _repo_root()
+    try:
+        baseline = [] if (args.no_baseline or args.write_baseline) \
+            else load_baseline(args.baseline)
+    except ValueError as e:
+        print(f"caratlint: {e}", file=sys.stderr)
+        return 2
+
+    result = lint_paths(paths, config=default_config(), root=root,
+                        baseline=baseline)
+
+    if args.write_baseline:
+        write_baseline(args.baseline,
+                       [f.fingerprint() for f in result.findings])
+        print(f"caratlint: wrote {len(result.findings)} fingerprint(s) "
+              f"to {args.baseline}")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps({
+            "files_scanned": result.files_scanned,
+            "suppressed": result.suppressed,
+            "baselined": result.baselined,
+            "findings": [{
+                "code": f.code, "path": f.path, "line": f.line,
+                "message": f.message, "fingerprint": f.fingerprint(),
+            } for f in result.findings],
+        }, indent=2))
+    else:
+        for f in result.findings:
+            print(f.render())
+        tail = (f"caratlint: {len(result.findings)} finding(s) in "
+                f"{result.files_scanned} file(s)"
+                f" ({result.suppressed} suppressed,"
+                f" {result.baselined} baselined)")
+        print(tail, file=sys.stderr if result.findings else sys.stdout)
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""Lint configuration: rule -> path scoping and per-rule allowlists.
+
+The config is code, not an ini file: the scopes *are* repo contracts
+(which modules carry the float-order contract, which modules may import
+jax at module level) and belong under review like any other invariant.
+Self-tests build ad-hoc configs pointed at fixture trees.
+"""
+from __future__ import annotations
+
+import fnmatch
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+def _match_any(relpath: str, patterns: List[str]) -> bool:
+    return any(fnmatch.fnmatch(relpath, pat) for pat in patterns)
+
+
+@dataclass
+class LintConfig:
+    """Everything the engine and rules read.
+
+    Paths and globs are POSIX-style, relative to the lint root (the
+    directory ``lint_paths`` is invoked from — the repo root in CI).
+    """
+
+    # directories whose basename/relpath match any of these are skipped
+    exclude: List[str] = field(default_factory=lambda: [
+        "*/__pycache__*", "*/.git/*", "*/.pytest_cache/*",
+        # seeded-violation fixtures must never fail a repo-wide run
+        "tools/caratlint/fixtures/*",
+    ])
+
+    # roots whose .py files map to dotted module names for the import
+    # graph (PEP-420 namespace packages are fine: no __init__.py needed)
+    source_roots: List[str] = field(default_factory=lambda: ["src"])
+
+    # rule code -> path globs it applies to; a missing key means "every
+    # scanned file". CL002 is graph-global and ignores this scoping.
+    rule_paths: Dict[str, List[str]] = field(default_factory=lambda: {
+        # float-order / bit-identity contract modules (see their
+        # module docstrings and CONTRIBUTING.md §CL003)
+        "CL003": ["src/repro/storage/soa.py", "src/repro/storage/pfs.py"],
+        # fused-step jit hygiene (CONTRIBUTING.md §CL004)
+        "CL004": ["src/repro/storage/device.py"],
+        # policy protocol + registry round-trip (CONTRIBUTING.md §CL005)
+        "CL005": ["src/repro/core/policies/*.py"],
+    })
+
+    # ---- CL001 rng-discipline -------------------------------------------
+    # modules allowed to touch global/unseeded RNG state: the stream
+    # factory itself (it *wraps* PCG64 construction)
+    cl001_allowed: List[str] = field(default_factory=lambda: [
+        "src/repro/utils/rng.py",
+    ])
+
+    # ---- CL002 soft-dep import graph ------------------------------------
+    # the scalar/soa entry modules that must import without jax — the
+    # static twin of tests/test_soa_device.py's blocked-jax subprocess
+    cl002_entries: List[str] = field(default_factory=lambda: [
+        "repro.storage",
+        "repro.core",
+        "repro.core.policies",
+        "repro.core.runtime",
+    ])
+    # modules explicitly allowed to import jax at module level even if
+    # reachable from an entry (none today: reachable modules go lazy)
+    cl002_allowed: List[str] = field(default_factory=list)
+
+    # ---- CL005 policy protocol ------------------------------------------
+    # the protocol base class providing the default split-lifecycle
+    # implementations (exempt from the gather="none" purity check)
+    cl005_protocol_base: str = "TuningPolicy"
+    # registry object whose .register() calls are round-trip checked
+    cl005_registry_name: str = "POLICIES"
+
+    # ------------------------------------------------------------ helpers
+    def is_excluded(self, relpath: str) -> bool:
+        return _match_any(relpath, self.exclude)
+
+    def rule_applies(self, code: str, relpath: str) -> bool:
+        pats = self.rule_paths.get(code)
+        return True if pats is None else _match_any(relpath, pats)
+
+    def cl001_is_allowed(self, relpath: str) -> bool:
+        return _match_any(relpath, self.cl001_allowed)
+
+
+def default_config() -> LintConfig:
+    """The repo's committed lint contract."""
+    return LintConfig()

@@ -1,0 +1,207 @@
+"""File discovery, suppression handling, rule dispatch, baseline filter.
+
+One parse per file; rules see a :class:`Project` with every parsed
+file plus the dotted-module index the import-graph rule walks.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.caratlint.config import LintConfig, default_config
+from tools.caratlint.rules.base import Finding
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*caratlint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*)")
+
+
+def _parse_suppressions(lines: Sequence[str]) \
+        -> Tuple[Dict[int, Set[str]], Set[str]]:
+    """Per-line and whole-file suppressions.
+
+    ``# caratlint: disable=CL001[,CL002]`` suppresses those codes on its
+    own line; written on a standalone comment line it also covers the
+    next line (so multi-line statements can carry the marker above).
+    ``disable-file=`` anywhere suppresses codes for the whole file.
+    ``all`` matches every code.
+    """
+    by_line: Dict[int, Set[str]] = {}
+    whole: Set[str] = set()
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group(2).split(",") if c.strip()}
+        if m.group(1) == "disable-file":
+            whole |= codes
+        else:
+            by_line.setdefault(i, set()).update(codes)
+            if text.lstrip().startswith("#"):     # standalone comment line
+                by_line.setdefault(i + 1, set()).update(codes)
+    return by_line, whole
+
+
+@dataclass
+class SourceFile:
+    """One parsed source file plus its suppression table."""
+
+    relpath: str                     # posix, relative to the lint root
+    module: Optional[str]            # dotted name when under a source root
+    tree: ast.Module
+    lines: List[str]
+    _line_suppress: Dict[int, Set[str]] = field(default_factory=dict)
+    _file_suppress: Set[str] = field(default_factory=set)
+
+    @classmethod
+    def parse(cls, root: str, relpath: str,
+              source_roots: Sequence[str]) -> Optional["SourceFile"]:
+        abspath = os.path.join(root, relpath)
+        try:
+            with open(abspath, "r", encoding="utf-8") as f:
+                source = f.read()
+            tree = ast.parse(source, filename=relpath)
+        except (OSError, SyntaxError):
+            return None                           # unreadable/unparsable
+        lines = source.splitlines()
+        by_line, whole = _parse_suppressions(lines)
+        return cls(relpath=relpath, module=_module_name(relpath,
+                                                        source_roots),
+                   tree=tree, lines=lines, _line_suppress=by_line,
+                   _file_suppress=whole)
+
+    def suppressed(self, code: str, line: int, end_line: int) -> bool:
+        if code in self._file_suppress or "all" in self._file_suppress:
+            return True
+        for ln in range(line, max(line, end_line) + 1):
+            codes = self._line_suppress.get(ln)
+            if codes and (code in codes or "all" in codes):
+                return True
+        return False
+
+
+def _module_name(relpath: str,
+                 source_roots: Sequence[str]) -> Optional[str]:
+    """Dotted module for files under a source root (None otherwise)."""
+    for sr in source_roots:
+        prefix = sr.rstrip("/") + "/"
+        if relpath.startswith(prefix):
+            rest = relpath[len(prefix):]
+            if not rest.endswith(".py"):
+                return None
+            parts = rest[:-3].split("/")
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            return ".".join(parts) if parts else None
+    return None
+
+
+@dataclass
+class Project:
+    """Everything the rules read."""
+
+    root: str
+    config: LintConfig
+    files: List[SourceFile]
+    modules: Dict[str, SourceFile] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        for f in self.files:
+            if f.module:
+                self.modules[f.module] = f
+
+    def files_for(self, code: str) -> List[SourceFile]:
+        return [f for f in self.files
+                if self.config.rule_applies(code, f.relpath)]
+
+    def file(self, relpath: str) -> Optional[SourceFile]:
+        for f in self.files:
+            if f.relpath == relpath:
+                return f
+        return None
+
+
+def _discover(root: str, paths: Sequence[str],
+              config: LintConfig) -> List[str]:
+    """All lintable .py relpaths under ``paths`` (files or directories)."""
+    found: List[str] = []
+    for p in paths:
+        abspath = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(abspath):
+            rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+            if not config.is_excluded(rel):
+                found.append(rel)
+            continue
+        for dirpath, dirnames, filenames in os.walk(abspath):
+            rel_dir = os.path.relpath(dirpath, root).replace(os.sep, "/")
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if not config.is_excluded(f"{rel_dir}/{d}/"))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                rel = f"{rel_dir}/{fn}" if rel_dir != "." else fn
+                if not config.is_excluded(rel):
+                    found.append(rel)
+    return sorted(dict.fromkeys(found))
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding]          # actionable (post-suppress/baseline)
+    suppressed: int                  # dropped by inline markers
+    baselined: int                   # dropped by the baseline file
+    files_scanned: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+
+def lint_paths(paths: Sequence[str], config: Optional[LintConfig] = None,
+               root: Optional[str] = None,
+               baseline: Optional[Sequence[str]] = None) -> LintResult:
+    """Run every registered rule over ``paths``.
+
+    ``baseline`` is a set of grandfathered fingerprints (one entry
+    suppresses one occurrence; N duplicate fingerprints in the baseline
+    cover N occurrences).
+    """
+    from tools.caratlint.rules import RULES     # late: rules import base
+
+    config = config or default_config()
+    root = root or os.getcwd()
+    relpaths = _discover(root, paths, config)
+    files = [sf for rp in relpaths
+             if (sf := SourceFile.parse(root, rp,
+                                        config.source_roots)) is not None]
+    project = Project(root=root, config=config, files=files)
+
+    raw: List[Finding] = []
+    for rule in RULES:
+        raw.extend(rule.check(project))
+    raw.sort(key=lambda f: (f.path, f.line, f.code))
+
+    by_path = {f.relpath: f for f in files}
+    budget: Dict[str, int] = {}
+    for fp in (baseline or ()):
+        budget[fp] = budget.get(fp, 0) + 1
+
+    kept: List[Finding] = []
+    suppressed = baselined = 0
+    for f in raw:
+        sf = by_path.get(f.path)
+        if sf is not None and sf.suppressed(f.code, f.line, f.end_line):
+            suppressed += 1
+            continue
+        fp = f.fingerprint()
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+            baselined += 1
+            continue
+        kept.append(f)
+    return LintResult(findings=kept, suppressed=suppressed,
+                      baselined=baselined, files_scanned=len(files))

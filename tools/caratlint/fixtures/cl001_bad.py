@@ -1,0 +1,20 @@
+"""Seeded CL001 violations (never imported — parsed only)."""
+import random
+
+import numpy as np
+from random import Random
+
+ok_seeded = random.Random(1234)                 # seeded: allowed
+ok_gen = np.random.Generator(np.random.PCG64(7))  # explicit: allowed
+ok_rng = np.random.default_rng(42)              # seeded: allowed
+
+bad_bare = random.Random()                      # VIOLATION: bare Random()
+bad_from = Random()                             # VIOLATION: bare Random()
+bad_global = random.random()                    # VIOLATION: global state
+bad_seed = np.random.seed(0)                    # VIOLATION: global numpy
+bad_legacy = np.random.rand(3)                  # VIOLATION: legacy global
+bad_default = np.random.default_rng()           # VIOLATION: unseeded
+
+suppressed = random.Random()  # caratlint: disable=CL001
+# caratlint: disable=CL001
+suppressed_above = np.random.seed(1)

@@ -1,0 +1,3 @@
+"""CL002 fixture entry module: must stay importable without jax."""
+import cl002_pkg.mid  # noqa: F401
+from cl002_pkg import sibling  # noqa: F401

@@ -1,0 +1,2 @@
+"""VIOLATION: module-level jax import reachable from the entry."""
+import jax  # noqa: F401

@@ -1,0 +1,7 @@
+"""Middle hop: no jax itself, but drags in a module-level importer."""
+import cl002_pkg.leaf_jax  # noqa: F401
+
+
+def lazy_ok():
+    # function-level import: NOT an import-time edge, never flagged
+    import jax  # noqa: F401

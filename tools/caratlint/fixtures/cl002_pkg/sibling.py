@@ -1,0 +1,2 @@
+"""Reachable, jax-importing, but suppressed inline."""
+import jax.numpy as jnp  # noqa: F401  # caratlint: disable=CL002

@@ -1,0 +1,2 @@
+"""Module-level jax import but NOT reachable from the entry: clean."""
+import jax  # noqa: F401

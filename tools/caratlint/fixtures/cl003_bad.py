@@ -1,0 +1,17 @@
+"""Seeded CL003 violations: reassociating folds / unstable sorts."""
+import numpy as np
+
+x = np.arange(8, dtype=np.float64)
+
+ok_cumsum = np.cumsum(x)[-1]                    # sequential fold: allowed
+ok_stable = np.sort(x, kind="stable")           # stable sort: allowed
+ok_merge = np.argsort(x, kind="mergesort")      # mergesort is stable
+
+bad_sum = np.sum(x)                             # VIOLATION: pairwise sum
+bad_nansum = np.nansum(x)                       # VIOLATION
+bad_method = x.sum()                            # VIOLATION: method form
+bad_reduceat = np.add.reduceat(x, [0, 4])       # VIOLATION
+bad_sort = np.sort(x)                           # VIOLATION: default quicksort
+bad_argsort = x.argsort()                       # VIOLATION: method form
+
+suppressed = np.sum(x)  # caratlint: disable=CL003

@@ -1,0 +1,30 @@
+"""Seeded CL004 violations inside a jitted step (parsed only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _build_step():
+    def step(state, obs):
+        ok_none = 0 if state is None else 1      # trace-time specialization: ok
+        y = jnp.sum(obs)
+        bad_host = y.item()                      # VIOLATION: host round-trip
+        bad_np = np.asarray(y)                   # VIOLATION: numpy in trace
+        ok_dtype = np.float32                    # dtype attr access: allowed
+        bad_cast = float(y)                      # VIOLATION: host scalar cast
+        if y > 0:                                # VIOLATION: traced branch
+            y = y + 1
+        sup = y.item()  # caratlint: disable=CL004
+        return (y + ok_none).astype(ok_dtype) + sup
+    return jax.jit(step, donate_argnums=(0,))
+
+
+step_fn = _build_step()
+
+
+def run(state, obs):
+    out = step_fn(state, obs)
+    bad_donated = state + 1                      # VIOLATION: donated buffer reuse
+    state = out                                  # rebind: reads below are fine
+    ok_rebound = state + 1
+    return out, bad_donated, ok_rebound

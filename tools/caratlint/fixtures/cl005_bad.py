@@ -1,0 +1,64 @@
+"""Seeded CL005 violations: fleet lifecycle and registry contracts."""
+from repro.core.policies.base import TuningPolicy
+from repro.core.policies import POLICIES
+
+
+class GoodLocal(TuningPolicy):
+    name = "goodlocal"
+    gather = "none"
+
+    def config(self):
+        return {}
+
+
+class BadGather(TuningPolicy):
+    gather = "shardwise"  # VIOLATION: unknown gather mode
+
+
+class BadFleetStep(TuningPolicy):
+    gather = "fleet"
+
+    def step(self, obs):  # VIOLATION: own step but no bus_decide
+        return obs
+
+
+class BadPartialReqRep(TuningPolicy):
+    gather = "fleet"
+
+    def bus_decide(self, obs):
+        return obs
+
+    def shard_collect(self, shard):  # VIOLATION: partial request/reply trio
+        return shard
+
+
+class BadLocalWithBusHooks(TuningPolicy):
+    gather = "none"
+
+    def bus_decide(self, obs):  # VIOLATION: gather="none" defines bus hook
+        return obs
+
+
+class Misnamed(TuningPolicy):
+    name = "other"
+    gather = "none"
+
+    def config(self):
+        return {}
+
+
+class NoConfig(TuningPolicy):
+    name = "noconfig"
+    gather = "none"
+
+
+POLICIES.register("misnamed", Misnamed)   # VIOLATION: key != class name attr
+POLICIES.register("noconfig", NoConfig)   # VIOLATION: no config() round-trip
+POLICIES.register("goodlocal", GoodLocal)  # clean registration
+
+
+class Suppressed(TuningPolicy):  # caratlint: disable=CL005
+    gather = "fleet"
+
+    def step(self, obs):
+        return obs

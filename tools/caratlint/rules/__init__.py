@@ -1,0 +1,17 @@
+"""Rule registry: one instance per CLxxx code, in code order."""
+from tools.caratlint.rules.base import Finding, Rule
+from tools.caratlint.rules.cl001_rng import RngDisciplineRule
+from tools.caratlint.rules.cl002_softdep import SoftDepImportGraphRule
+from tools.caratlint.rules.cl003_floatorder import FloatOrderContractRule
+from tools.caratlint.rules.cl004_jit import JitHygieneRule
+from tools.caratlint.rules.cl005_policy import PolicyProtocolRule
+
+RULES = [
+    RngDisciplineRule(),
+    SoftDepImportGraphRule(),
+    FloatOrderContractRule(),
+    JitHygieneRule(),
+    PolicyProtocolRule(),
+]
+
+__all__ = ["Finding", "Rule", "RULES"]

@@ -1,0 +1,143 @@
+"""Rule protocol, findings, and shared AST helpers."""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclass
+class Finding:
+    """One rule violation at one source location."""
+
+    code: str          # "CL001"
+    path: str          # posix relpath from the lint root
+    line: int          # 1-based line of the offending node
+    end_line: int      # end line (>= line; multi-line statements)
+    message: str
+
+    def fingerprint(self) -> str:
+        """Stable identity for baseline matching. Line numbers are
+        deliberately excluded so unrelated edits above a grandfathered
+        finding don't un-baseline it; two identical findings in one
+        file share a fingerprint (the engine counts occurrences)."""
+        return f"{self.code}|{self.path}|{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+class Rule:
+    """One enforced contract. Subclasses set the metadata and implement
+    :meth:`check` over the whole project (file scoping via
+    ``project.files_for(code)``; graph rules walk ``project.modules``)."""
+
+    code: str = ""
+    name: str = ""
+    # one-line statement of the contract (shown by --list-rules)
+    contract: str = ""
+
+    def check(self, project) -> List[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the rules
+# ---------------------------------------------------------------------------
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c" for pure Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class ImportMap:
+    """Alias resolution for one file: maps local names to the dotted
+    things they denote (``np`` -> ``numpy``, ``Random`` ->
+    ``random.Random``)."""
+
+    aliases: Dict[str, str] = field(default_factory=dict)
+
+    @classmethod
+    def of(cls, tree: ast.AST) -> "ImportMap":
+        m = cls()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    local = al.asname or al.name.split(".")[0]
+                    target = al.name if al.asname else al.name.split(".")[0]
+                    m.aliases[local] = target
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for al in node.names:
+                    if al.name == "*":
+                        continue
+                    local = al.asname or al.name
+                    m.aliases[local] = f"{node.module}.{al.name}"
+        return m
+
+    def resolve(self, dotted: str) -> str:
+        """Expand the leading alias of a dotted chain, if imported."""
+        head, _, rest = dotted.partition(".")
+        target = self.aliases.get(head)
+        if target is None:
+            return dotted
+        return f"{target}.{rest}" if rest else target
+
+    def resolve_call(self, call: ast.Call) -> Optional[str]:
+        chain = attr_chain(call.func)
+        return self.resolve(chain) if chain else None
+
+
+def module_scope_nodes(tree: ast.Module) -> Iterable[ast.stmt]:
+    """Statements executed at import time: the module body, descending
+    into If/Try/With blocks (still import-time) but not into function
+    bodies (deferred). Class bodies run at import time and are included."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        node = stack.pop(0)
+        yield node
+        if isinstance(node, (ast.If, ast.Try, ast.With, ast.For, ast.While,
+                             ast.ClassDef)):
+            for fld in ("body", "orelse", "finalbody", "handlers"):
+                for child in getattr(node, fld, []):
+                    if isinstance(child, ast.ExceptHandler):
+                        stack.extend(child.body)
+                    elif isinstance(child, ast.stmt):
+                        stack.append(child)
+
+
+def module_level_imports(
+        tree: ast.Module) -> List[Tuple[ast.stmt, List[str]]]:
+    """(node, [imported dotted modules]) for every import executed at
+    module import time. ``from pkg import name`` contributes ``pkg``
+    (plus ``pkg.name`` — the caller decides whether ``name`` is a
+    submodule); relative imports are returned with a leading ``.`` per
+    level for the caller to resolve against the importing package."""
+    out: List[Tuple[ast.stmt, List[str]]] = []
+    for node in module_scope_nodes(tree):
+        if isinstance(node, ast.Import):
+            out.append((node, [al.name for al in node.names]))
+        elif isinstance(node, ast.ImportFrom):
+            base = "." * node.level + (node.module or "")
+            mods = [base]
+            mods.extend(f"{base}.{al.name}" for al in node.names
+                        if al.name != "*")
+            out.append((node, mods))
+    return out
+
+
+def function_defs(tree: ast.AST) -> Dict[str, List[ast.AST]]:
+    """All (async) function defs in a module keyed by bare name,
+    including nested ones (closure builders like ``_build_step``)."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    return defs

@@ -1,0 +1,84 @@
+"""CL001 rng-discipline: all randomness flows through seeded streams.
+
+Every experiment in this repo must replay bit-for-bit from its seed:
+the scalar tuner oracle documents its RNG *consumption order*, the SoA
+and device backends must stay on the identical PCG64 trajectory, and
+the property-test shim derives per-test seeds. One call into the
+process-global RNG (``random.random()``, ``np.random.seed``) or one
+unseeded generator (``random.Random()``, ``np.random.default_rng()``)
+silently breaks all of it. Explicitly-seeded constructions —
+``np.random.Generator(np.random.PCG64(seed))``, ``random.Random(seed)``
+— are allowed; the blessed path is ``repro.utils.rng.RngStream``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.caratlint.rules.base import Finding, ImportMap, Rule, attr_chain
+
+# numpy.random names that construct explicit, caller-seeded generators
+_EXPLICIT_NP = {"Generator", "PCG64", "PCG64DXSM", "Philox", "SFC64",
+                "MT19937", "SeedSequence", "BitGenerator"}
+_HINT = ("route randomness through repro.utils.rng.RngStream (seeded "
+         "PCG64) or pass an explicit seed")
+
+
+class RngDisciplineRule(Rule):
+    code = "CL001"
+    name = "rng-discipline"
+    contract = ("no process-global or unseeded RNG: randomness flows "
+                "through seeded RngStream/PCG64 constructions")
+
+    def check(self, project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files_for(self.code):
+            if project.config.cl001_is_allowed(sf.relpath):
+                continue
+            imports = ImportMap.of(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = imports.resolve_call(node)
+                if target is None:
+                    continue
+                # only trust chains whose head is an actual import —
+                # a local variable that happens to be named `random`
+                # is not the stdlib module
+                chain = attr_chain(node.func)
+                if chain is None or \
+                        chain.split(".")[0] not in imports.aliases:
+                    continue
+                msg = self._violation(target, node)
+                if msg:
+                    findings.append(Finding(
+                        code=self.code, path=sf.relpath, line=node.lineno,
+                        end_line=node.end_lineno or node.lineno,
+                        message=f"{msg} — {_HINT}"))
+        return findings
+
+    @staticmethod
+    def _violation(target: str, call: ast.Call) -> str:
+        """Non-empty message when ``target(...)`` breaks the contract."""
+        has_args = bool(call.args or call.keywords)
+        if target == "random.Random":
+            if not has_args:
+                return "bare random.Random() seeds from OS entropy"
+            return ""
+        if target.startswith("random."):
+            attr = target[len("random."):]
+            if "." in attr:            # random.Random(x).something — fine
+                return ""
+            return (f"random.{attr}() consumes the process-global "
+                    f"random state")
+        if target.startswith("numpy.random."):
+            attr = target[len("numpy.random."):]
+            if attr.split(".")[0] in _EXPLICIT_NP:
+                return ""
+            if attr == "default_rng":
+                if not has_args:
+                    return "np.random.default_rng() without a seed"
+                return ""
+            return (f"np.random.{attr}() uses numpy's global/legacy "
+                    f"RNG state")
+        return ""

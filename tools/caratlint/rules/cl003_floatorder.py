@@ -1,0 +1,99 @@
+"""CL003 float-order-contract: bit-identity modules keep scalar order.
+
+``storage/soa.py`` and ``storage/pfs.py`` promise the SoA backend is
+**bit-identical** to the scalar oracle — not close, identical. IEEE-754
+addition is not associative, so the promise survives only while every
+order-sensitive accumulation keeps the scalar code's association:
+per-OST folds are one sequential ``np.cumsum`` over stably-sorted
+segments, never ``np.sum``/``np.add.reduceat`` (both reassociate, and
+numpy's pairwise summation changes result bits with array length), and
+every sort feeding a fold is ``kind="stable"`` (the default introsort
+reorders equal keys, permuting the fold order).
+
+This rule flags, inside the contract-marked modules only:
+
+* reassociating reductions: ``np.sum``/``np.nansum``/
+  ``np.add.reduceat``/``math.fsum`` calls and ``.sum(...)`` method
+  calls (an order-free use — e.g. counting a boolean mask — carries an
+  inline ``# caratlint: disable=CL003`` stating why);
+* sorts without a stable kind: ``np.sort``/``np.argsort`` or the
+  ``.sort()``/``.argsort()`` methods where ``kind`` is not
+  ``"stable"``/``"mergesort"``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.caratlint.rules.base import (Finding, ImportMap, Rule,
+                                        attr_chain)
+
+_REDUCTIONS = {"numpy.sum", "numpy.nansum", "numpy.add.reduceat",
+               "math.fsum"}
+_SORTS = {"numpy.sort", "numpy.argsort"}
+_STABLE_KINDS = {"stable", "mergesort"}
+
+
+class FloatOrderContractRule(Rule):
+    code = "CL003"
+    name = "float-order-contract"
+    contract = ("bit-identity modules use sequential cumsum folds and "
+                "stable sorts, never reassociating reductions")
+
+    def check(self, project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files_for(self.code):
+            imports = ImportMap.of(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._violation(node, imports)
+                if msg:
+                    findings.append(Finding(
+                        code=self.code, path=sf.relpath, line=node.lineno,
+                        end_line=node.end_lineno or node.lineno,
+                        message=msg))
+        return findings
+
+    def _violation(self, call: ast.Call,
+                   imports: ImportMap) -> Optional[str]:
+        chain = attr_chain(call.func)
+        target = imports.resolve(chain) if chain else None
+
+        if target in _REDUCTIONS:
+            return (f"{chain}() reassociates an order-sensitive float "
+                    f"sum; the bit-identity contract requires the "
+                    f"sequential fold (cumsum over stably-sorted "
+                    f"segments — see _SegmentFold)")
+        if target in _SORTS:
+            if not self._stable_kind(call):
+                return (f"{chain}() without kind='stable' permutes "
+                        f"equal keys and with them the fold order; "
+                        f"pass kind='stable'")
+            return None
+
+        # method-call forms on arbitrary expressions: x.sum(), x.sort()
+        if isinstance(call.func, ast.Attribute):
+            # a resolved module-level target was already handled above;
+            # skip chains that start at an imported module (np.cumsum)
+            head_is_module = (chain is not None and
+                              chain.split(".")[0] in imports.aliases)
+            if head_is_module:
+                return None
+            if call.func.attr == "sum":
+                return ("method .sum() reassociates (numpy pairwise "
+                        "summation); use the sequential fold, or "
+                        "suppress with a reason if the operand is "
+                        "order-free (bool/int counts)")
+            if call.func.attr in ("sort", "argsort") \
+                    and not self._stable_kind(call):
+                return (f".{call.func.attr}() without kind='stable' "
+                        f"permutes equal keys; pass kind='stable'")
+        return None
+
+    @staticmethod
+    def _stable_kind(call: ast.Call) -> bool:
+        for kw in call.keywords:
+            if kw.arg == "kind" and isinstance(kw.value, ast.Constant):
+                return kw.value.value in _STABLE_KINDS
+        return False

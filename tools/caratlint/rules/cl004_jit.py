@@ -1,0 +1,358 @@
+"""CL004 jit-hygiene: the fused device step stays fused.
+
+``storage/device.py`` promises one jit-compiled plan+resolve+commit
+step per interval, compiled once per channel layout, with the state
+buffers donated. Three classes of edit silently break that promise
+without failing any fast test:
+
+* **host round-trips** inside traced code — ``.item()``/``.tolist()``,
+  ``float()``/``int()``/``bool()`` on traced arrays, or any ``np.*``
+  call (numpy evaluates eagerly on host, forcing a device sync or a
+  trace error on the first non-CPU backend);
+* **Python control flow on traced values** — an ``if``/``while`` whose
+  condition depends on an array inside a traced function either
+  retraces per branch or raises ``TracerBoolConversionError``; use
+  ``jnp.where``/``lax.cond``. Trace-time specialization on static
+  Python values (``if x is None``) is fine and allowed;
+* **use of donated buffers after donation** — a jit callable built
+  with ``donate_argnums`` invalidates the passed-in buffers; reading
+  the donated reference after the call returns garbage (or an error)
+  on real accelerators even though CPU runs may appear to work.
+
+The traced set is computed statically with lexical scoping: every
+function passed to (or decorated with) ``jax.jit``, plus the functions
+it calls by name, transitively — so a closure-built ``step`` resolves
+to the local def, not a samename method elsewhere in the file.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.caratlint.rules.base import (Finding, ImportMap, Rule,
+                                        attr_chain)
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# numpy attributes that are dtypes/introspection, fine to reference in
+# traced code (jnp accepts numpy dtypes)
+_NP_DTYPES = {"float32", "float64", "int8", "int16", "int32", "int64",
+              "uint8", "uint16", "uint32", "uint64", "bool_", "dtype",
+              "finfo", "iinfo"}
+_HOST_CASTS = {"float", "int", "bool"}
+
+
+class _ScopeIndex:
+    """Lexical index: which function encloses each node, and which
+    named defs live directly in each scope (None = module scope)."""
+
+    def __init__(self, tree: ast.Module):
+        self.parent: Dict[int, Optional[ast.AST]] = {}
+        self.enclosing: Dict[int, Optional[ast.AST]] = {}
+        self.defs: Dict[Optional[int], Dict[str, ast.AST]] = {None: {}}
+        self._walk(tree, None)
+
+    def _walk(self, node: ast.AST, scope: Optional[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            self.enclosing[id(child)] = scope
+            if isinstance(child, _FUNC_NODES):
+                self.parent[id(child)] = scope
+                if not isinstance(child, ast.Lambda):
+                    # class bodies are transparent for call resolution:
+                    # register the def in the nearest *function* scope
+                    self.defs.setdefault(
+                        id(scope) if scope else None, {})[child.name] \
+                        = child
+                self.defs.setdefault(id(child), {})
+                self._walk(child, child)
+            else:
+                self._walk(child, scope)
+
+    def resolve(self, name: str,
+                from_scope: Optional[ast.AST]) -> Optional[ast.AST]:
+        scope = from_scope
+        while True:
+            found = self.defs.get(id(scope) if scope else None,
+                                  {}).get(name)
+            if found is not None:
+                return found
+            if scope is None:
+                return None
+            scope = self.parent.get(id(scope))
+
+
+def _jit_target(call: ast.Call, imports: ImportMap) -> bool:
+    """True when ``call`` is jax.jit(...) (or functools.partial of it)."""
+    chain = attr_chain(call.func)
+    target = imports.resolve(chain) if chain else None
+    if target == "jax.jit":
+        return True
+    if target == "functools.partial" and call.args:
+        inner = attr_chain(call.args[0])
+        return bool(inner) and imports.resolve(inner) == "jax.jit"
+    return False
+
+
+def _donate_argnums(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+    return ()
+
+
+def _static_safe_test(test: ast.expr) -> bool:
+    """Conditions that stay in Python at trace time: identity tests
+    against None, isinstance checks, plain constants."""
+    if isinstance(test, ast.Constant):
+        return True
+    if isinstance(test, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _static_safe_test(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_static_safe_test(v) for v in test.values)
+    if isinstance(test, ast.Call):
+        return attr_chain(test.func) == "isinstance"
+    return False
+
+
+class JitHygieneRule(Rule):
+    code = "CL004"
+    name = "jit-hygiene"
+    contract = ("fused-step functions: no host round-trips, no Python "
+                "control flow on traced values, no use of donated "
+                "buffers after donation")
+
+    def check(self, project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files_for(self.code):
+            findings.extend(self._check_file(sf))
+        return findings
+
+    # ------------------------------------------------------------ file pass
+    def _check_file(self, sf) -> List[Finding]:
+        imports = ImportMap.of(sf.tree)
+        index = _ScopeIndex(sf.tree)
+
+        roots: List[ast.AST] = []
+        # binding name -> donated positional indices, for call sites
+        donating: Dict[str, Tuple[int, ...]] = {}
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) and _jit_target(node, imports):
+                scope = index.enclosing.get(id(node))
+                if node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Name):
+                        fn = index.resolve(arg.id, scope)
+                        if fn is not None:
+                            roots.append(fn)
+                    elif isinstance(arg, ast.Lambda):
+                        roots.append(arg)
+                donated = _donate_argnums(node)
+                if donated:
+                    for tgt in self._binding_names(sf.tree, node, index):
+                        donating[tgt] = donated
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    chain = attr_chain(dec)
+                    if chain and imports.resolve(chain) == "jax.jit":
+                        roots.append(node)
+                    elif isinstance(dec, ast.Call) \
+                            and _jit_target(dec, imports):
+                        roots.append(node)
+
+        traced = self._closure(roots, index)
+
+        findings: List[Finding] = []
+        for fn in traced:
+            findings.extend(self._check_traced(sf, fn, imports, traced))
+        findings.extend(self._check_donation(sf, donating))
+        return findings
+
+    @staticmethod
+    def _binding_names(tree: ast.AST, call: ast.Call,
+                       index: _ScopeIndex) -> List[str]:
+        """Names the donating jit callable is bound to: direct
+        assignment (``self._f = jax.jit(...)`` -> ``_f``), or — the
+        builder pattern — assignment from a call to the function that
+        *returns* the jit callable (``self._f = self._build()`` where
+        ``_build`` ends in ``return jax.jit(...)``)."""
+        def targets_of(assign: ast.Assign) -> List[str]:
+            names = []
+            for tgt in assign.targets:
+                if isinstance(tgt, ast.Name):
+                    names.append(tgt.id)
+                elif isinstance(tgt, ast.Attribute):
+                    names.append(tgt.attr)
+            return names
+
+        # the function whose body returns the jit call, if any
+        builder = index.enclosing.get(id(call))
+        returns_it = builder is not None and any(
+            isinstance(n, ast.Return) and n.value is call
+            for n in ast.walk(builder))
+        builder_name = getattr(builder, "name", None)
+
+        out: List[str] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if node.value is call:
+                out.extend(targets_of(node))
+            elif returns_it and isinstance(node.value, ast.Call):
+                fn = node.value.func
+                called = fn.id if isinstance(fn, ast.Name) else (
+                    fn.attr if isinstance(fn, ast.Attribute) else None)
+                if called == builder_name:
+                    out.extend(targets_of(node))
+        return out
+
+    @staticmethod
+    def _closure(roots: List[ast.AST],
+                 index: _ScopeIndex) -> List[ast.AST]:
+        """Root functions plus every function they call by (lexically
+        resolved) name, transitively."""
+        seen: Set[int] = set()
+        traced: List[ast.AST] = []
+        queue = list(roots)
+        while queue:
+            fn = queue.pop(0)
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            traced.append(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name):
+                    callee = index.resolve(
+                        node.func.id, index.enclosing.get(id(node)))
+                    if callee is not None:
+                        queue.append(callee)
+        return traced
+
+    # --------------------------------------------------- traced-body checks
+    def _check_traced(self, sf, fn: ast.AST, imports: ImportMap,
+                      traced: List[ast.AST]) -> List[Finding]:
+        name = getattr(fn, "name", "<lambda>")
+        where = f"traced function '{name}'"
+        out: List[Finding] = []
+        # nested defs that are themselves in the traced list get their
+        # own pass; don't double-report their bodies here
+        nested = {id(n) for n in ast.walk(fn)
+                  if n is not fn and any(n is t for t in traced)}
+
+        def skip(node: ast.AST) -> bool:
+            for t in traced:
+                if id(t) in nested:
+                    if (t.lineno <= node.lineno
+                            and node.lineno <= (t.end_lineno
+                                                or t.lineno)):
+                        return True
+            return False
+
+        def flag(node: ast.AST, msg: str) -> None:
+            if skip(node):
+                return
+            out.append(Finding(
+                code=self.code, path=sf.relpath, line=node.lineno,
+                end_line=getattr(node, "end_lineno", None) or node.lineno,
+                message=f"{msg} in {where}"))
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in ("item", "tolist"):
+                    flag(node, f".{node.func.attr}() forces a host "
+                               f"round-trip")
+                    continue
+                chain = attr_chain(node.func)
+                target = imports.resolve(chain) if chain else None
+                if target and (target == "numpy"
+                               or target.startswith("numpy.")):
+                    attr = target.partition(".")[2]
+                    if attr.split(".")[0] not in _NP_DTYPES:
+                        flag(node, f"host numpy call {chain}() inside "
+                                   f"jit (use jnp / jax.lax)")
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in _HOST_CASTS \
+                        and node.args \
+                        and not isinstance(node.args[0], ast.Constant):
+                    flag(node, f"{node.func.id}() on a traced value "
+                               f"forces concretization")
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and not _static_safe_test(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                flag(node.test, f"Python `{kind}` on a (potentially) "
+                                f"traced condition — use jnp.where / "
+                                f"jax.lax.cond, or test static Python "
+                                f"values only (x is None)")
+            elif isinstance(node, ast.IfExp) \
+                    and not _static_safe_test(node.test):
+                flag(node, "ternary on a (potentially) traced "
+                           "condition — use jnp.where")
+        return out
+
+    # ----------------------------------------------------- donation checks
+    def _check_donation(self, sf,
+                        donating: Dict[str, Tuple[int, ...]]) \
+            -> List[Finding]:
+        """Flag reads of a donated argument after the donating call
+        (without an intervening rebind of that reference)."""
+        if not donating:
+            return []
+        out: List[Finding] = []
+        for fn in [n for n in ast.walk(sf.tree)
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))]:
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                bind = None
+                if isinstance(node.func, ast.Name):
+                    bind = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    bind = node.func.attr
+                if bind not in donating:
+                    continue
+                for i in donating[bind]:
+                    if i >= len(node.args):
+                        continue
+                    ref = attr_chain(node.args[i])
+                    if ref is not None:
+                        out.extend(self._reads_after(sf, fn, node,
+                                                     bind, ref))
+        return out
+
+    def _reads_after(self, sf, fn: ast.AST, call: ast.Call, bind: str,
+                     ref: str) -> List[Finding]:
+        call_line = getattr(call, "end_lineno", None) or call.lineno
+        stores = [n.lineno for n in ast.walk(fn)
+                  if isinstance(n, (ast.Name, ast.Attribute))
+                  and isinstance(getattr(n, "ctx", None), ast.Store)
+                  and attr_chain(n) == ref]
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if not isinstance(getattr(node, "ctx", None), ast.Load):
+                continue
+            if attr_chain(node) != ref or node.lineno <= call_line:
+                continue
+            # a rebind between the call and the read re-validates it
+            if any(call.lineno <= s <= node.lineno for s in stores):
+                continue
+            out.append(Finding(
+                code=self.code, path=sf.relpath, line=node.lineno,
+                end_line=node.end_lineno or node.lineno,
+                message=(f"read of '{ref}' after it was donated to "
+                         f"jit callable '{bind}' (donate_argnums) — "
+                         f"donated buffers are invalidated; rebind "
+                         f"the result first")))
+        return out

@@ -1,0 +1,196 @@
+"""CL005 policy-protocol: fleet policies keep the split lifecycle.
+
+Under the sharded runtime a ``gather="fleet"`` policy never sees the
+whole fleet — it runs as ``shard_observe -> bus_decide ->
+shard_actuate`` messages over the TuningBus, plus an optional
+``shard_collect -> bus_resolve -> shard_apply`` request/reply round.
+The base class decomposes the *default* ``step`` into those hooks, so
+a policy that overrides ``step`` with bespoke member ordering (CARAT's
+fleet engine) but inherits the split defaults silently diverges
+between single-process and sharded execution. Likewise a half-
+implemented request/reply round deadlocks or drops state on the bus.
+
+Checks, scoped to the policies package:
+
+* ``gather`` must be ``"none"`` or ``"fleet"`` (the runtime hard-fails
+  on anything else — catch the typo at lint time);
+* a ``gather="fleet"`` class overriding ``step`` must also override
+  ``bus_decide`` (the coordinator half of its bespoke ordering);
+* the request/reply trio ``shard_collect``/``bus_resolve``/
+  ``shard_apply`` is all-or-nothing;
+* a class declaring ``gather="none"`` must not define bus-side hooks
+  (misdeclared gather ships a policy the runtime will never call them
+  on) — the protocol base itself, which provides the defaults, is
+  exempt;
+* registry round-trip: each ``POLICIES.register("key", Cls)`` (or
+  decorator form) must register a class whose ``name`` attribute
+  equals the key, and the class must define ``config()`` so
+  ``make_policy(**policy.config())`` reconstructs it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from tools.caratlint.rules.base import Finding, Rule, attr_chain
+
+_BUS_HOOKS = {"shard_observe", "bus_decide", "shard_actuate",
+              "shard_collect", "bus_resolve", "shard_apply"}
+_REQREP = {"shard_collect", "bus_resolve", "shard_apply"}
+_GATHER_VALUES = {"none", "fleet"}
+
+
+class _ClassInfo:
+    def __init__(self, sf, node: ast.ClassDef):
+        self.sf = sf
+        self.node = node
+        self.name = node.name
+        self.bases = [attr_chain(b) or "" for b in node.bases]
+        self.methods = {n.name for n in node.body
+                        if isinstance(n, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))}
+        self.attrs: Dict[str, object] = {}
+        for stmt in node.body:
+            tgt = val = None
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                tgt, val = stmt.targets[0].id, stmt.value
+            elif isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                tgt, val = stmt.target.id, stmt.value
+            if tgt and isinstance(val, ast.Constant):
+                self.attrs[tgt] = val.value
+
+
+class PolicyProtocolRule(Rule):
+    code = "CL005"
+    name = "policy-protocol"
+    contract = ("gather='fleet' policies implement the split bus "
+                "lifecycle; registered policies round-trip through "
+                "POLICIES/make_policy")
+
+    def check(self, project) -> List[Finding]:
+        cfg = project.config
+        classes: Dict[str, _ClassInfo] = {}
+        scoped = project.files_for(self.code)
+        for sf in scoped:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes[node.name] = _ClassInfo(sf, node)
+
+        findings: List[Finding] = []
+        for info in classes.values():
+            findings.extend(self._check_class(info, cfg))
+        for sf in scoped:
+            findings.extend(self._check_registry(sf, classes, cfg))
+        return findings
+
+    # ------------------------------------------------------------- lifecycle
+    def _check_class(self, info: _ClassInfo, cfg) -> List[Finding]:
+        out: List[Finding] = []
+        node = info.node
+
+        def flag(msg: str, line: Optional[int] = None) -> None:
+            out.append(Finding(
+                code=self.code, path=info.sf.relpath,
+                line=line or node.lineno,
+                end_line=line or node.lineno,
+                message=f"class {info.name}: {msg}"))
+
+        gather = info.attrs.get("gather")
+        if gather is not None and gather not in _GATHER_VALUES:
+            flag(f"gather={gather!r} is not a valid gather mode "
+                 f"(expected 'none' or 'fleet')")
+            return out
+
+        if gather == "fleet":
+            if "step" in info.methods \
+                    and "bus_decide" not in info.methods:
+                flag("gather='fleet' with a bespoke step() override "
+                     "must also override bus_decide() — the inherited "
+                     "default decomposes the *base* step, so sharded "
+                     "decisions silently diverge from single-process")
+            have = _REQREP & info.methods
+            if have and have != _REQREP:
+                missing = sorted(_REQREP - have)
+                flag(f"partial request/reply round: defines "
+                     f"{sorted(have)} but not {missing} — the "
+                     f"shard_collect/bus_resolve/shard_apply trio is "
+                     f"all-or-nothing")
+        elif gather == "none" and info.name != cfg.cl005_protocol_base:
+            offending = sorted(_BUS_HOOKS & info.methods)
+            if offending:
+                flag(f"declares gather='none' but defines bus hooks "
+                     f"{offending} the runtime will never invoke — "
+                     f"declare gather='fleet' or drop them")
+        return out
+
+    # -------------------------------------------------------------- registry
+    def _check_registry(self, sf, classes: Dict[str, _ClassInfo],
+                        cfg) -> List[Finding]:
+        out: List[Finding] = []
+        reg = cfg.cl005_registry_name
+
+        def check_pair(key: str, cls_name: str, line: int) -> None:
+            info = classes.get(cls_name)
+            if info is None:
+                return                      # imported from out of scope
+            declared = info.attrs.get("name")
+            if declared != key:
+                out.append(Finding(
+                    code=self.code, path=sf.relpath, line=line,
+                    end_line=line,
+                    message=(f"{reg}.register({key!r}, {cls_name}) but "
+                             f"{cls_name}.name is {declared!r} — "
+                             f"policy.config() round-trips through "
+                             f"make_policy(name), so the registry key "
+                             f"and the class name attribute must "
+                             f"match")))
+            if not self._defines_config(info, classes, cfg):
+                out.append(Finding(
+                    code=self.code, path=sf.relpath, line=line,
+                    end_line=line,
+                    message=(f"registered policy {cls_name} does not "
+                             f"define config(); "
+                             f"policy_from_config(policy.config()) "
+                             f"cannot reconstruct it with its "
+                             f"constructor arguments")))
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                chain = attr_chain(node.func)
+                if chain == f"{reg}.register" and len(node.args) >= 2 \
+                        and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[1], ast.Name):
+                    check_pair(node.args[0].value, node.args[1].id,
+                               node.lineno)
+            elif isinstance(node, ast.ClassDef):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and attr_chain(dec.func) == f"{reg}.register" \
+                            and dec.args \
+                            and isinstance(dec.args[0], ast.Constant):
+                        check_pair(dec.args[0].value, node.name,
+                                   node.lineno)
+        return out
+
+    @staticmethod
+    def _defines_config(info: _ClassInfo, classes: Dict[str, _ClassInfo],
+                        cfg) -> bool:
+        """config() in the class or an in-scope ancestor other than the
+        protocol base (whose default carries no constructor kwargs)."""
+        seen = set()
+        stack = [info]
+        while stack:
+            cur = stack.pop()
+            if cur.name in seen:
+                continue
+            seen.add(cur.name)
+            if cur.name != cfg.cl005_protocol_base \
+                    and "config" in cur.methods:
+                return True
+            for base in cur.bases:
+                base_info = classes.get(base.split(".")[-1])
+                if base_info is not None:
+                    stack.append(base_info)
+        return False
