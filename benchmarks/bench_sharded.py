@@ -20,6 +20,20 @@ Two deployments run under :class:`repro.core.runtime.ShardedRuntime`:
    *delivered* a message staler than ``max_staleness_intervals`` and
    that the straggler really lagged (else the gate is vacuous).
 
+Plus two cross-process gates riding the same deployments via
+:class:`repro.core.runtime.transport.ProcessRuntime`:
+
+3. **Process-mode replay identity** (hard): the replayed multi-phase
+   trace corpus re-runs with every shard in a spawned worker process
+   over ``MultiprocessBus`` pipes and must stay bit-identical to the
+   single-process oracle — decisions, cache limits, throughput, bytes.
+4. **Kill + restore** (hard): one worker process is killed mid-run and
+   its shard restored from the latest policy/client snapshot. The run
+   must complete decision-identical to the unfaulted single-process
+   run (no lost client state) and every stage-2 round must conserve
+   the cache budget (sum of effective allocations never exceeds the
+   raw demand total it was trimmed from).
+
 Emitted rows (benchmarks/common.py CSV convention) plus a
 ``BENCH_sharded.json`` artifact with the raw numbers.
 
@@ -38,6 +52,8 @@ from common import carat_models, emit  # noqa: E402
 
 from repro.core import CaratPolicy, default_spaces, make_policy  # noqa: E402
 from repro.core.runtime import ShardedRuntime  # noqa: E402
+from repro.core.runtime.transport import (KillShard,  # noqa: E402
+                                          ProcessRuntime)
 from repro.storage import (Simulation, compile_trace,  # noqa: E402
                            load_bundled_trace, get_workload,
                            simulation_from_schedules)
@@ -118,6 +134,68 @@ def sync_identity_magpie(duration):
     sim_b, pol_b = build()
     res_b = ShardedRuntime(sim_b, mode="sync").run(duration)
     return signature(sim_a, pol_a, res_a) == signature(sim_b, pol_b, res_b)
+
+
+# ------------------------------------- gates 3+4: cross-process runtime --
+def process_sync_identity_replay(duration=None):
+    """Replay corpus, spawned workers over MultiprocessBus pipes."""
+    schedules = compile_trace(load_bundled_trace("mpiio_strided_ckpt"))
+    if duration is None:
+        duration = max(s.duration for s in schedules.values())
+
+    def build():
+        sim = simulation_from_schedules(schedules, seed=3)
+        pol = sim.attach_policy(CaratPolicy(SPACES, carat_models(),
+                                            backend="numpy"))
+        return sim, pol
+
+    sim_a, pol_a = build()
+    res_a = sim_a.run(duration)
+    sim_b, pol_b = build()
+    prt = ProcessRuntime(sim_b, mode="sync", transport="pipe", n_shards=2)
+    res_b = prt.run(duration)
+    ok = signature(sim_a, pol_a, res_a) == signature(sim_b, pol_b, res_b)
+    return ok, pol_b.decision_count
+
+
+def process_kill_restore(n_nodes, clients_per_node, duration):
+    """Kill one worker mid-run, restore its shard from snapshot; the run
+    must finish decision-identical with conserved budget accounting."""
+
+    n = n_nodes * clients_per_node
+    budgets = {node: float(SPACES.cache_max * clients_per_node
+                           * (0.15 if node % 2 else 1.5))
+               for node in range(n_nodes)}
+
+    def build():
+        # build_fleet, plus stage-2 logging so conservation is checkable
+        sim = Simulation([get_workload(WL_CYCLE[i % len(WL_CYCLE)])
+                          for i in range(n)],
+                         seed=3,
+                         topology=[i // clients_per_node for i in range(n)])
+        pol = sim.attach_policy(CaratPolicy(
+            SPACES, carat_models(), backend="numpy",
+            node_budgets_mb=budgets, budget_trading=True,
+            log_stage2=True))
+        return sim, pol
+
+    sim_a, pol_a = build()
+    res_a = sim_a.run(duration)
+    sim_b, pol_b = build()
+    n_steps = int(round(duration / 0.5))
+    prt = ProcessRuntime(
+        sim_b, mode="sync", transport="pipe",
+        events=[KillShard(at_interval=max(2, n_steps // 2), sid=1)],
+        snapshot_every=2)
+    res_b = prt.run(duration)
+    identical = (signature(sim_a, pol_a, res_a)
+                 == signature(sim_b, pol_b, res_b))
+    no_lost_clients = (len(res_b.client_throughput) == len(sim_b.clients)
+                       and len(pol_b.controllers) == len(sim_b.clients))
+    conserved = bool(pol_b.stage2_events) and all(
+        effective.sum() <= raw.sum() * (1 + 1e-12) + 1e-6
+        for _, raw, effective, _ in pol_b.stage2_events)
+    return identical, no_lost_clients, conserved, len(pol_b.stage2_events)
 
 
 # ---------------------------------------------- gate 2: async stragglers --
@@ -203,6 +281,37 @@ def main(argv=None):
     if not ok_magpie:
         failures.append("sync-mode full-gather (magpie) diverged from the "
                         "single-process path")
+
+    # -- 3. process-mode replay identity (MultiprocessBus) --------------------
+    ok_proc, n_dec_p = process_sync_identity_replay(
+        duration=None if not args.smoke else 20.0)
+    report["process_sync_identical_replay"] = ok_proc
+    emit("sharded_process_replay", 0.0, f"{n_dec_p}dec|identical={ok_proc}")
+    if not ok_proc:
+        failures.append("process-mode ProcessRuntime (MultiprocessBus) "
+                        "diverged from the single-process Simulation on "
+                        "the replayed trace")
+
+    # -- 4. kill one worker, restore from snapshot ----------------------------
+    ok_kr, no_lost, conserved, n_s2 = process_kill_restore(
+        n_nodes, cpn, duration)
+    report["kill_restore_identical"] = ok_kr
+    report["kill_restore_no_lost_clients"] = no_lost
+    report["kill_restore_budget_conserved"] = conserved
+    emit("sharded_kill_restore", 0.0,
+         f"identical={ok_kr}|no_lost={no_lost}|conserved={conserved}"
+         f"|{n_s2}stage2")
+    if not ok_kr:
+        failures.append("kill+restore-from-snapshot run diverged from the "
+                        "unfaulted single-process run (client or policy "
+                        "state was lost in the respawn)")
+    if not no_lost:
+        failures.append("kill+restore dropped clients or controllers "
+                        "from the merged fleet")
+    if not conserved:
+        failures.append("stage-2 cache-budget accounting broke under "
+                        "kill+restore (effective allocations exceed raw "
+                        "demand, or no stage-2 round fired)")
 
     # -- 2. async straggler tolerance -----------------------------------------
     ratio, details = async_straggler(n_nodes, cpn, async_duration)

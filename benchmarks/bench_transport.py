@@ -1,0 +1,180 @@
+"""Cross-process transport gates: spawn-fleet identity + async cadence.
+
+The transport twin of ``bench_sharded.py``: the same deployments, but
+with every shard in its own spawned worker process and the tuning
+traffic crossing a real process/host boundary.
+
+Gates (all hard):
+
+1. **Pipe-transport sync identity**: ``ProcessRuntime`` over
+   ``MultiprocessBus`` (spawned workers, pipes) must be bit-identical —
+   RPC decisions, cache limits, throughput series, I/O bytes — to the
+   single-process ``Simulation.run`` on the multi-node bursty fleet
+   with cross-node budget trading. The CARAT obs/decision payloads
+   carry serialized tuner-RNG state across the boundary; identity here
+   proves no draw was lost, duplicated, or reordered.
+2. **Socket loopback identity**: the same fleet over ``SocketBusHost``
+   / ``SocketBus`` (length-prefixed frames on loopback TCP — the
+   cross-host transport) must match too.
+3. **Repartition identity**: an elastic mid-run repartition (merge +
+   respawn under a different shard count) must not perturb decisions.
+4. **Async process cadence**: with one worker process injected as a
+   straggler, the healthy workers' probe cadence must stay within 1.5x
+   of a clean async run (median over reps; the bounded-staleness bus
+   drops late traffic instead of waiting), the straggler must really
+   lag, and nothing staler than ``max_staleness_intervals`` may ever
+   be *delivered*.
+
+Emitted rows (benchmarks/common.py CSV convention) plus a
+``BENCH_transport.json`` artifact with the raw numbers.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_transport.py [--smoke]
+"""
+import argparse
+import json
+import statistics
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "benchmarks")
+
+from common import emit  # noqa: E402
+from bench_sharded import build_fleet, signature  # noqa: E402
+
+from repro.core.runtime.transport import (ProcessRuntime,  # noqa: E402
+                                          Repartition)
+
+
+def process_sync_identity(n_nodes, clients_per_node, duration,
+                          transport, events=(), **prt_kw):
+    """(identical?, ProcessRuntime) for one spawned-fleet run vs the
+    single-process oracle."""
+    sim_a, pol_a = build_fleet(n_nodes, clients_per_node)
+    res_a = sim_a.run(duration)
+    sim_b, pol_b = build_fleet(n_nodes, clients_per_node)
+    prt = ProcessRuntime(sim_b, mode="sync", transport=transport,
+                         events=events, **prt_kw)
+    res_b = prt.run(duration)
+    ok = signature(sim_a, pol_a, res_a) == signature(sim_b, pol_b, res_b)
+    return ok, prt
+
+
+def healthy_cadence(prt, exclude=()):
+    vals = [c for sid, c in prt.probe_cadence().items()
+            if sid not in exclude]
+    return statistics.median(vals)
+
+
+def async_process_straggler(n_nodes, clients_per_node, duration,
+                            staleness=2, reps=3):
+    """(cadence_ratio, report rows) — median over repetitions (process
+    spawn + wall-clock on shared CI runners is noisy)."""
+    ratios, details = [], []
+    for rep in range(reps):
+        sim, _ = build_fleet(n_nodes, clients_per_node, seed=11 + rep,
+                             trading=False)
+        prt0 = ProcessRuntime(sim, mode="async",
+                              max_staleness_intervals=staleness)
+        prt0.run(duration)
+        c0 = healthy_cadence(prt0, exclude=(0,))
+        # a ~10x-slow worker process: its interval costs ~10x a healthy one
+        delay = max(9.0 * c0, 0.002)
+        sim, _ = build_fleet(n_nodes, clients_per_node, seed=11 + rep,
+                             trading=False)
+        prt1 = ProcessRuntime(sim, mode="async",
+                              max_staleness_intervals=staleness,
+                              straggler_delay_s={0: delay})
+        prt1.run(duration)
+        c1 = healthy_cadence(prt1, exclude=(0,))
+        straggler_c = prt1.probe_cadence()[0]
+        ratios.append(c1 / max(c0, 1e-9))
+        details.append({
+            "cadence_plain_ms": c0 * 1e3, "cadence_straggler_ms": c1 * 1e3,
+            "straggler_cadence_ms": straggler_c * 1e3,
+            "injected_delay_ms": delay * 1e3,
+            "straggler_lag_x": straggler_c / max(c0, 1e-9),
+            "bus": prt1.stats(),
+        })
+    return statistics.median(ratios), details
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller fleet + shorter runs for CI")
+    args = ap.parse_args(argv)
+
+    n_nodes = 4 if args.smoke else 6
+    cpn = 2 if args.smoke else 4
+    duration = 10.0 if args.smoke else 16.0
+    async_duration = 8.0 if args.smoke else 14.0
+
+    failures = []
+    report = {"smoke": bool(args.smoke), "nodes": n_nodes,
+              "clients_per_node": cpn}
+
+    # -- 1/2. spawn-fleet sync identity, both transports ---------------------
+    for transport in ("pipe", "socket"):
+        ok, prt = process_sync_identity(n_nodes, cpn, duration, transport)
+        report[f"sync_identical_{transport}"] = ok
+        report[f"bus_stats_{transport}"] = prt.stats()
+        emit(f"transport_sync_{transport}_n{n_nodes}x{cpn}", 0.0,
+             f"identical={ok}|published={prt.stats()['published']}")
+        if not ok:
+            failures.append(
+                f"{transport}-transport ProcessRuntime diverged from the "
+                f"single-process Simulation (serialized-RNG protocol or "
+                f"barrier replay is broken)")
+
+    # -- 3. elastic repartition identity -------------------------------------
+    n_steps = int(round(duration / 0.5))
+    ok, _ = process_sync_identity(
+        n_nodes, cpn, duration, "pipe",
+        events=[Repartition(at_interval=n_steps // 2, n_shards=2)])
+    report["sync_identical_repartition"] = ok
+    emit("transport_repartition", 0.0, f"identical={ok}")
+    if not ok:
+        failures.append("mid-run repartition (merge + respawn under a new "
+                        "shard count) perturbed decisions")
+
+    # -- 4. async process straggler tolerance --------------------------------
+    ratio, details = async_process_straggler(n_nodes, cpn, async_duration)
+    report["async_cadence_ratio"] = ratio
+    report["async_runs"] = details
+    worst_stale = max(d["bus"]["max_staleness_seen"] for d in details)
+    lag = statistics.median(d["straggler_lag_x"] for d in details)
+    emit(f"transport_async_straggler_n{n_nodes}x{cpn}",
+         details[-1]["cadence_straggler_ms"] * 1e3,
+         f"{ratio:.2f}x_cadence|straggler_{lag:.1f}x_slow|"
+         f"max_staleness={worst_stale}")
+    if ratio > 1.5:
+        failures.append(f"healthy-worker probe cadence degraded "
+                        f"{ratio:.2f}x under a straggler process "
+                        f"(> 1.5x floor)")
+    if lag < 3.0:
+        failures.append(f"injected straggler only ran {lag:.1f}x slow — "
+                        f"the tolerance gate would be vacuous")
+    if worst_stale > 2:
+        failures.append(f"bus delivered a message {worst_stale} intervals "
+                        f"stale (> max_staleness_intervals=2)")
+
+    report["failures"] = failures
+    with open("BENCH_transport.json", "w") as f:
+        json.dump(report, f, indent=2)
+
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def run() -> None:
+    """benchmarks.run section hook: smoke-scale, raises on gate failure."""
+    if main(["--smoke"]) != 0:
+        raise RuntimeError("bench_transport gates failed (see FAIL lines)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,9 +12,12 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   ablation  tuner strategy ablation (paper §III-D, quantified)
   ablation_tau  tau sweep measuring the GBDT calibration gap
   roofline  per-(arch x shape x mesh) dry-run roofline terms (§Roofline)
-  sharded   sharded runtime gates (sync identity + async stragglers)
+  sharded   sharded runtime gates (sync identity + async stragglers,
+            process-mode replay identity, kill+restore-from-snapshot)
   soa_device  device-resident soa-jax fleet gates (fused step speedup,
             million-client interval, shard->device sync equivalence)
+  transport cross-process transport gates (spawned-fleet pipe/socket
+            identity, elastic repartition, async process stragglers)
 
 Tooling sections (repo gates, not paper artifacts):
   lint      caratlint contract pass over src/tests/benchmarks
@@ -44,6 +47,7 @@ from benchmarks import (
     bench_roofline,
     bench_sharded,
     bench_soa_device,
+    bench_transport,
 )
 
 def run_lint() -> None:
@@ -80,6 +84,7 @@ SECTIONS = [
     ("roofline", bench_roofline.run),
     ("sharded", bench_sharded.run),
     ("soa_device", bench_soa_device.run),
+    ("transport", bench_transport.run),
     # tooling sections: repo gates that ride the same harness
     ("lint", run_lint),
 ]

@@ -60,6 +60,21 @@ across jax devices. ``benchmarks/bench_soa_device.py`` hard-gates the
 fused step at >= 3x the host soa step at 100k clients and steps a
 million-client fleet per interval under a stated budget.
 
+Part 9 takes the sharded fleet across process boundaries
+(``repro.core.runtime.transport``): a ``ProcessRuntime`` pickles the
+assembled simulation once and spawns one worker process per shard,
+coordinated over a real transport — multiprocessing pipes
+(``transport="pipe"``) or length-prefixed frames on TCP
+(``transport="socket"``, the cross-host transport; workers reconnect
+with bounded backoff). Payloads must pass the ``transport.wire`` purity
+gate — tuner RNG position crosses as serialized state, never as a live
+generator — which is what keeps sync process mode decision-identical to
+the single-process run. Workers snapshot every N intervals, so a
+SIGKILLed shard respawns from its latest snapshot and replays back into
+the fleet with nothing lost (``benchmarks/bench_transport.py`` and the
+kill+restore gate in ``benchmarks/bench_sharded.py`` hard-gate all of
+this).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -280,47 +295,107 @@ def main():
     print("\n== Device-resident soa-jax fleet: fused jit stepping ==")
     try:
         import jax  # noqa: F401
+        has_jax = True
     except ImportError:
         print("jax not installed — backend='soa-jax' raises an actionable "
               "ImportError; scalar/soa run everywhere. Skipping Part 8.")
-        return
+        has_jax = False
 
-    # same constructor switch; per-client state now lives on-device in
-    # donated jax arrays, and sim.step() runs plan+resolve+commit as one
-    # fused jit call (only the per-OST congestion noise draw stays host-side)
-    dev = fleet("soa-jax", 20_000)
-    dev.run(8.0)                        # 16 intervals
-    host = fleet("soa", 20_000)
-    host.run(8.0)
-    a = host.core.read.app_bytes + host.core.write.app_bytes
-    dev.core.ensure_host()              # lazy read-through of device state
-    b = dev.core.read.app_bytes + dev.core.write.app_bytes
-    rel = float(np.max(np.abs(b - a) / np.maximum(np.abs(a), 1.0)))
-    print(f"soa vs soa-jax at 20k clients over 16 intervals: "
-          f"max rel {rel:.1e} (tolerance contract: 1e-9 — XLA "
-          f"reassociates the channel/OST sums), "
-          f"jit traces = {dev.device_fleet.n_traces} (compile once, "
-          f"re-step forever)")
+    if has_jax:
+        # same constructor switch; per-client state now lives on-device in
+        # donated jax arrays, and sim.step() runs plan+resolve+commit as one
+        # fused jit call (only the per-OST congestion draw stays host-side)
+        dev = fleet("soa-jax", 20_000)
+        dev.run(8.0)                    # 16 intervals
+        host = fleet("soa", 20_000)
+        host.run(8.0)
+        a = host.core.read.app_bytes + host.core.write.app_bytes
+        dev.core.ensure_host()          # lazy read-through of device state
+        b = dev.core.read.app_bytes + dev.core.write.app_bytes
+        rel = float(np.max(np.abs(b - a) / np.maximum(np.abs(a), 1.0)))
+        print(f"soa vs soa-jax at 20k clients over 16 intervals: "
+              f"max rel {rel:.1e} (tolerance contract: 1e-9 — XLA "
+              f"reassociates the channel/OST sums), "
+              f"jit traces = {dev.device_fleet.n_traces} (compile once, "
+              f"re-step forever)")
 
-    # config mutations mid-run re-upload statics without retracing; only
-    # a channel-layout (stripe-width) change triggers one new trace
-    dev.clients[0].set_rpc_config(64, 4)
-    dev.clients[1].set_cache_limit(16)
-    dev.run(2.0)
-    print(f"after mid-run RPC/cache mutations: jit traces still = "
-          f"{dev.device_fleet.n_traces}")
+        # config mutations mid-run re-upload statics without retracing; only
+        # a channel-layout (stripe-width) change triggers one new trace
+        dev.clients[0].set_rpc_config(64, 4)
+        dev.clients[1].set_cache_limit(16)
+        dev.run(2.0)
+        print(f"after mid-run RPC/cache mutations: jit traces still = "
+              f"{dev.device_fleet.n_traces}")
 
-    ms_host = ms_per_step(fleet("soa", 20_000))
-    ms_dev = ms_per_step(fleet("soa-jax", 20_000))
-    print(f"per-interval step at 20k clients: {ms_host:.1f} ms host soa -> "
-          f"{ms_dev:.1f} ms fused device step "
-          f"({ms_host / max(ms_dev, 1e-9):.1f}x; the gated 100k-client "
-          f"striped-fleet ratio is >= 3x — benchmarks/bench_soa_device.py, "
-          f"which also steps a 1,000,000-client fleet per interval)")
-    # ShardedRuntime(sim, mode="sync", device_map="auto") pins each shard's
-    # slice to its own jax device and merges per-OST demand partials
-    # on-device before the cluster resolve — tests/test_soa_device.py runs
-    # it under xla_force_host_platform_device_count=8
+        ms_host = ms_per_step(fleet("soa", 20_000))
+        ms_dev = ms_per_step(fleet("soa-jax", 20_000))
+        print(f"per-interval step at 20k clients: {ms_host:.1f} ms host soa "
+              f"-> {ms_dev:.1f} ms fused device step "
+              f"({ms_host / max(ms_dev, 1e-9):.1f}x; the gated 100k-client "
+              f"striped-fleet ratio is >= 3x — "
+              f"benchmarks/bench_soa_device.py, which also steps a "
+              f"1,000,000-client fleet per interval)")
+        # ShardedRuntime(sim, mode="sync", device_map="auto") pins each
+        # shard's slice to its own jax device and merges per-OST demand
+        # partials on-device before the cluster resolve —
+        # tests/test_soa_device.py runs it under
+        # xla_force_host_platform_device_count=8
+
+    # -- Part 9: cross-process fleets — spawned workers, kill + restore ----
+    print("\n== cross-process fleet: spawned shard workers on the bus ==")
+    from repro.core.runtime.transport import KillShard, ProcessRuntime
+
+    names = ["dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m"] * 2
+    topology = [i // 2 for i in range(8)]       # 4 nodes -> 4 shards
+
+    def build_proc():
+        sim = Simulation([get_workload(n) for n in names], seed=7,
+                         topology=topology)
+        policy = sim.attach_policy(CaratPolicy(spaces, models,
+                                               backend="numpy"))
+        return sim, policy
+
+    # the Part 6 fleet again, but each shard is now its own spawned
+    # PROCESS: the assembled sim is pickled once, every worker starts from
+    # byte-identical state, and all tuning traffic crosses the process
+    # boundary on the bus — obs payloads carry serialized tuner-RNG state
+    # (rng.state()), never live objects (transport.wire hard-fails those)
+    sim_sp, pol_sp = build_proc()
+    res_sp = sim_sp.run(10.0)
+    sim_pr, pol_pr = build_proc()
+    prt = ProcessRuntime(sim_pr, mode="sync", transport="pipe")
+    res_pr = prt.run(10.0)
+    identical = (pol_sp.decisions == pol_pr.decisions
+                 and res_sp.app_read_bytes == res_pr.app_read_bytes)
+    print(f"pipe transport, sync mode: decision-identical to "
+          f"single-process = {identical}")
+
+    # kill a worker mid-run: every snapshot_every intervals each worker
+    # publishes a retained snapshot (clients + policy state as one pickle
+    # graph); the killed shard respawns from it and replays forward —
+    # deterministically, with duplicates dropped — so nothing is lost
+    sim_kr, pol_kr = build_proc()
+    prt = ProcessRuntime(sim_kr, mode="sync", transport="pipe",
+                         events=[KillShard(at_interval=8, sid=1)],
+                         snapshot_every=2)
+    res_kr = prt.run(10.0)
+    identical = (pol_sp.decisions == pol_kr.decisions
+                 and res_sp.client_throughput == res_kr.client_throughput)
+    print(f"SIGKILL shard 1 at interval 8, restore from snapshot: "
+          f"still identical = {identical}")
+
+    # transport="socket" runs the same protocol over length-prefixed
+    # frames on TCP — the cross-host transport. host_address=(host, port)
+    # binds the coordinator; SocketBus(addr) clients reconnect with
+    # bounded backoff, so workers on another terminal/host can drop and
+    # rejoin. bench_transport.py gates socket identity on every run.
+    sim_sk, pol_sk = build_proc()
+    prt = ProcessRuntime(sim_sk, mode="sync", transport="socket",
+                         host_address=("127.0.0.1", 0))
+    prt.run(10.0)
+    print(f"socket transport (loopback TCP): identical = "
+          f"{pol_sp.decisions == pol_sk.decisions}, "
+          f"bus stats {prt.stats()}")
 
 
 if __name__ == "__main__":

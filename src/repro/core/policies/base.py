@@ -270,6 +270,20 @@ class TuningPolicy:
         """Shard side: apply ``(key, reply)`` messages routed back to
         this shard. Default: nothing to apply."""
 
+    # ------------------------------------------- snapshot / restore hooks
+    def shard_state(self, client_ids: Sequence[int]) -> Any:
+        """Portable policy state for the given shard's clients, carried
+        inside transport snapshot/report blobs (pickled as one graph with
+        the shard's clients). Policies holding per-client mutable state
+        outside the clients themselves (CARAT's controller shells)
+        override this; the default — stateless, or state lives on the
+        clients — returns None."""
+        return None
+
+    def merge_shard_state(self, state: Any) -> None:
+        """Install state produced by :meth:`shard_state` (snapshot
+        restore, worker report merge, repartition). Default: no-op."""
+
     # ------------------------------------------------------------ config
     def config(self) -> Dict[str, Any]:
         """Constructor kwargs + ``"policy": name`` — the round-trippable

@@ -20,17 +20,32 @@ Construction comes in two shapes:
 * ``CaratPolicy(models=..., controllers=[...])`` — host prebuilt shells.
 
 Sharded execution: CARAT is ``gather = "fleet"`` — under a
-:class:`~repro.core.runtime.ShardedRuntime`, shards publish
-``(client_id, (op, feats))`` observation messages, the coordinator runs
-the one batched ``decide_many`` over the gathered batch (restored to
-member order, so sync mode stays decision-identical), and scatters
-``(client_id, (op, proposal, share))`` decisions back. The stage-2
-drain rides the request/reply round: shards publish pending node
-demand rows keyed by arbiter rank, the coordinator batches every
-gathered node into one ``cache_allocation_many`` call — with
-``budget_trading`` the :func:`trade_node_budgets` pass runs over that
-same gathered batch, which is how budget moves *across shards* — and
-shards apply the returned allocation rows.
+:class:`~repro.core.runtime.ShardedRuntime` (or a cross-process
+:class:`~repro.core.runtime.transport.ProcessRuntime`), shards publish
+``(client_id, (op, feats, rng_state))`` observation messages — the
+tuner RNG travels as *serialized state*
+(:meth:`repro.utils.rng.RngStream.state`), never as a live generator,
+so the same protocol crosses process and host boundaries. The
+coordinator restores member order, rebuilds the per-client streams,
+runs the one batched ``decide_many`` engine over the gathered batch,
+and scatters ``(client_id, (op, proposal, share, rng_state'))``
+decisions back; ``shard_actuate`` installs the advanced stream state
+before applying — so a decided client's RNG trajectory is exactly the
+single-process one, and a *dropped* stale observation leaves the
+stream untouched (the draw never happened). The stage-2 drain rides
+the request/reply round: shards publish pending node demand rows keyed
+by arbiter rank, the coordinator batches every gathered node into one
+``cache_allocation_many`` call — with ``budget_trading`` the
+:func:`trade_node_budgets` pass runs over that same gathered batch,
+which is how budget moves *across shards* — and shards apply the
+returned allocation rows.
+
+Elasticity: :meth:`CaratPolicy.shard_state` /
+:meth:`CaratPolicy.merge_shard_state` carry a shard's controller
+shells (stage machines, arbiters, tuner RNGs, decision logs) across a
+snapshot/restore or repartition boundary — the transport pickles them
+inside one shard blob together with the shard's clients, so the
+``controller.client`` identity survives the trip.
 """
 from __future__ import annotations
 
@@ -300,13 +315,21 @@ class CaratPolicy(TuningPolicy):
         ops = [op for _, op, _ in obs_batch]
         feats = np.stack([f for _, _, f in obs_batch])
         rngs = [c.tuner.rng for c, _, _ in obs_batch]
+        return self._propose_batch(ops, feats, rngs)
+
+    def _propose_batch(self, ops: List[str], feats: np.ndarray,
+                       rngs: List[RngStream]) -> List[tuple]:
+        """The shared decision engine: one ``propose_many`` call plus the
+        fleet accounting. ``decide_many`` feeds it the shells' own RNG
+        streams; ``bus_decide`` feeds it streams rebuilt from serialized
+        state — same draws either way."""
         t0 = time.perf_counter()
         proposals = self.tuner.propose_many(ops, feats, rngs=rngs)
         elapsed = time.perf_counter() - t0
         self.batch_time_total += elapsed
         self.batch_count += 1
-        self.decision_count += len(obs_batch)
-        share = elapsed / len(obs_batch)
+        self.decision_count += len(ops)
+        share = elapsed / len(ops)
         return [(p, share) for p in proposals]
 
     def actuate(self, client: IOClient, decision: Tuple[Any, float],
@@ -425,7 +448,9 @@ class CaratPolicy(TuningPolicy):
     def shard_observe(self, clients: Sequence[IOClient], t: float,
                       dt: float) -> List[Tuple[int, tuple]]:
         """Observe this shard's shells in member order; pending stage-1
-        requests become ``(client_id, (op, feats))`` messages."""
+        requests become ``(client_id, (op, feats, rng_state))`` messages.
+        The tuner stream crosses the bus as serialized state — no live
+        generator (or shell) reference leaves the shard."""
         by_id = {c.client_id: c for c in clients}
         out: List[Tuple[int, tuple]] = []
         for ctrl in self.controllers:
@@ -434,7 +459,8 @@ class CaratPolicy(TuningPolicy):
                 continue                    # lives on another shard
             req = ctrl.observe(client, t, dt)
             if req is not None:
-                out.append((ctrl.client_id, (req[0], req[1])))
+                out.append((ctrl.client_id,
+                            (req[0], req[1], ctrl.tuner.rng.state())))
         return out
 
     def bus_decide(self, obs: Sequence[Tuple[int, tuple]],
@@ -442,23 +468,36 @@ class CaratPolicy(TuningPolicy):
         """One batched Algorithm 1 over the gathered observations.
 
         Restores fleet member order first, so a sync-mode barrier gather
-        feeds ``decide_many`` the exact batch the single-process ``step``
-        builds — decisions stay bit-identical.
+        feeds the decision engine the exact batch the single-process
+        ``step`` builds — decisions stay bit-identical. Draws come from
+        per-client streams rebuilt from the observations' serialized
+        state, and each decision carries the advanced state back to the
+        owning shard — the coordinator needs no shell access, so the
+        same code serves in-process and cross-process transports.
         """
         if not obs:
             return []
         ranks = self._member_ranks()
         obs = sorted(obs, key=lambda p: ranks[p[0]])
-        pending = [(self._shell(cid), op, feats) for cid, (op, feats) in obs]
-        decisions = self.decide_many(pending)
-        return [(cid, (op, proposal, share))
-                for (cid, (op, _)), (proposal, share) in zip(obs, decisions)]
+        ops = [op for _, (op, _, _) in obs]
+        feats = np.stack([f for _, (_, f, _) in obs])
+        rngs = [RngStream.from_state(s) for _, (_, _, s) in obs]
+        decisions = self._propose_batch(ops, feats, rngs)
+        return [(cid, (op, proposal, share, rng.state()))
+                for (cid, (op, _f, _s)), (proposal, share), rng
+                in zip(obs, decisions, rngs)]
 
     def shard_actuate(self, clients: Sequence[IOClient],
                       decisions: Sequence[Tuple[int, tuple]],
                       t: float) -> None:
-        for cid, (op, proposal, share) in decisions:
-            self._shell(cid).actuate(op, proposal, t, share)
+        for cid, (op, proposal, share, rng_state) in decisions:
+            ctrl = self._shell(cid)
+            # install the coordinator's advanced stream before applying:
+            # the shell's RNG trajectory stays exactly the single-process
+            # one (and an observation dropped for staleness leaves it
+            # untouched — that draw never happened anywhere)
+            ctrl.tuner.rng.set_state(rng_state)
+            ctrl.actuate(op, proposal, t, share)
 
     def shard_collect(self, clients: Sequence[IOClient],
                       t: float) -> List[Tuple[int, tuple]]:
@@ -534,6 +573,31 @@ class CaratPolicy(TuningPolicy):
         by_rank = dict(self._ranked_arbiters())
         for rank, (values, _effective) in replies:
             by_rank[rank].apply_slots(values)
+
+    # ------------------------------------------------- snapshot / restore
+    def shard_state(self, client_ids: Sequence[int]) -> List[CaratController]:
+        """The policy state owned by one shard: its controller shells
+        (stage machines, node arbiters, tuner RNGs, decision logs).
+        Returned live — the transport pickles the whole shard blob in one
+        graph, so ``controller.client`` identity with the shard's clients
+        survives the round trip."""
+        keep = {int(i) for i in client_ids}
+        return [c for c in self.controllers if c.client_id in keep]
+
+    def merge_shard_state(self, state: Sequence[CaratController]) -> None:
+        """Install shells restored from :meth:`shard_state`, replacing
+        this policy's by client id (member order — and so decision
+        batching — is preserved)."""
+        slot = {c.client_id: i for i, c in enumerate(self.controllers)}
+        for ctrl in state:
+            i = slot.get(ctrl.client_id)
+            if i is None:
+                raise KeyError(f"restored shell for unknown client "
+                               f"{ctrl.client_id}")
+            self.controllers[i] = ctrl
+        # the in-place replacement keeps the same list object, which the
+        # id->shell cache keys on — drop it or lookups serve stale shells
+        self._shell_cache = None
 
     # ----------------------------------------------------------- accounting
     @property

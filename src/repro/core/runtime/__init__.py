@@ -10,10 +10,19 @@ decision-identical to the single-process step (gated by
 ``benchmarks/bench_sharded.py``); async mode trades identity for
 bounded-staleness cadence isolation — a straggler shard never blocks
 the fleet's probe cadence.
+
+The ``transport`` subpackage carries the same bus protocol across
+process and host boundaries: :class:`~repro.core.runtime.transport.
+MultiprocessBus` (pipes), :class:`~repro.core.runtime.transport.
+SocketBus` (loopback/remote TCP), and :class:`~repro.core.runtime.
+transport.ProcessRuntime` — the spawn/join worker lifecycle with
+snapshot/restore and elastic repartitioning. Imported lazily here
+(``from repro.core.runtime import transport``) — the in-process runtime
+must not pull in multiprocessing machinery at import.
 """
-from repro.core.runtime.bus import (BusMessage, COORDINATOR, InProcessBus,
-                                    TuningBus)
+from repro.core.runtime.bus import (BusAccounting, BusMessage, COORDINATOR,
+                                    InProcessBus, TuningBus)
 from repro.core.runtime.sharded import Shard, ShardedRuntime
 
-__all__ = ["BusMessage", "COORDINATOR", "InProcessBus", "TuningBus",
-           "Shard", "ShardedRuntime"]
+__all__ = ["BusAccounting", "BusMessage", "COORDINATOR", "InProcessBus",
+           "TuningBus", "Shard", "ShardedRuntime"]

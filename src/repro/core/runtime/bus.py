@@ -27,12 +27,13 @@ The bus records the worst staleness it ever *delivered*
 a lock + per-topic deques, with a condition variable so a coordinator
 thread can sleep until traffic arrives. It is safe for the sync
 round-robin scheduler (single thread, zero contention) and the async
-threaded scheduler alike. A multiprocessing transport can implement the
-same four methods over queues/shared memory; payloads are
-``(client_id, data)``-shaped on purpose — no live client objects cross
-the bus — but some CARAT payloads still carry in-process references
-(per-client RNG state inside controller shells), which is the
-serialization work the ROADMAP tracks for the multiprocess remainder.
+threaded scheduler alike. The cross-process transports
+(``repro.core.runtime.transport``: :class:`MultiprocessBus` over pipes,
+:class:`SocketBus` over length-prefixed frames) implement the same four
+methods against a hub-side ``InProcessBus`` store, sharing this
+module's :class:`BusAccounting` semantics; payloads are
+``(client_id, data)``-shaped and wire-pure (``transport.wire``) — no
+live client objects, locks, or controller shells cross the bus.
 """
 from __future__ import annotations
 
@@ -75,35 +76,33 @@ class TuningBus:
         raise NotImplementedError
 
 
-class InProcessBus(TuningBus):
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._traffic = threading.Condition(self._lock)
-        self._queues: Dict[str, deque] = {}
-        self._retained: Dict[str, Dict[object, BusMessage]] = {}
-        # observability: the async gates read these
+class BusAccounting:
+    """Staleness/drop accounting shared by every transport.
+
+    One implementation of the observability contract: ``published`` /
+    ``consumed`` counters, ``dropped_stale`` (messages a bounded
+    consume refused as too old), and ``max_staleness_seen`` (the worst
+    staleness ever *delivered*). :class:`InProcessBus` mixes it in
+    directly; the cross-process transports keep an ``InProcessBus``
+    store on the hub side and forward its :meth:`stats`, so a fleet
+    reads identical accounting whatever transport carries it — the
+    transport-conformance suite (``tests/test_transport.py``) asserts
+    this counter-for-counter.
+    """
+
+    def _init_accounting(self) -> None:
         self.published = 0
         self.consumed = 0
         self.dropped_stale = 0
         self.max_staleness_seen = 0     # worst staleness ever *delivered*
 
-    def publish(self, topic: str, shard: object, interval: int,
-                payload: Any, retain: bool = False) -> None:
-        msg = BusMessage(topic, shard, int(interval), payload)
-        with self._traffic:
-            if retain:
-                # latest-per-shard slot only: a retained topic is polled
-                # via latest(), so queueing history would just grow
-                # unboundedly over a long run
-                self._retained.setdefault(topic, {})[shard] = msg
-            else:
-                self._queues.setdefault(topic, deque()).append(msg)
-            self.published += 1
-            self._traffic.notify_all()
-
     def _deliver(self, msgs: List[BusMessage], now: Optional[int],
                  max_staleness: Optional[int],
                  count_drops: bool = True) -> List[BusMessage]:
+        """Apply the staleness bound to a candidate delivery, updating
+        the counters. ``count_drops=False`` is the retained-latest path:
+        a retained message is re-read every poll, so counting each stale
+        re-read would measure poll frequency, not messages."""
         if now is None:
             self.consumed += len(msgs)
             return msgs
@@ -118,6 +117,35 @@ class InProcessBus(TuningBus):
             out.append(m)
         self.consumed += len(out)
         return out
+
+    def stats(self) -> Dict[str, int]:
+        return {"published": self.published, "consumed": self.consumed,
+                "dropped_stale": self.dropped_stale,
+                "max_staleness_seen": self.max_staleness_seen}
+
+
+class InProcessBus(BusAccounting, TuningBus):
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._traffic = threading.Condition(self._lock)
+        self._queues: Dict[str, deque] = {}
+        self._retained: Dict[str, Dict[object, BusMessage]] = {}
+        # observability: the async gates read these
+        self._init_accounting()
+
+    def publish(self, topic: str, shard: object, interval: int,
+                payload: Any, retain: bool = False) -> None:
+        msg = BusMessage(topic, shard, int(interval), payload)
+        with self._traffic:
+            if retain:
+                # latest-per-shard slot only: a retained topic is polled
+                # via latest(), so queueing history would just grow
+                # unboundedly over a long run
+                self._retained.setdefault(topic, {})[shard] = msg
+            else:
+                self._queues.setdefault(topic, deque()).append(msg)
+            self.published += 1
+            self._traffic.notify_all()
 
     def consume(self, topic: str, now: Optional[int] = None,
                 max_staleness: Optional[int] = None) -> List[BusMessage]:
@@ -146,6 +174,4 @@ class InProcessBus(TuningBus):
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
-            return {"published": self.published, "consumed": self.consumed,
-                    "dropped_stale": self.dropped_stale,
-                    "max_staleness_seen": self.max_staleness_seen}
+            return super().stats()

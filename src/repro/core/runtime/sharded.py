@@ -47,11 +47,12 @@ Two execution modes:
     knob. ``max_staleness_intervals=0`` still tolerates same-interval
     skew; larger values trade coupling freshness for cadence isolation.
 
-The in-process transports share one limitation, tracked in ROADMAP:
-payloads are id-keyed and object-free on the bus, but CARAT's
-coordinator still reaches into its in-process controller shells (tuner
-RNG state) when deciding, so a true multiprocessing transport needs
-shell-state serialization behind the same :class:`TuningBus` interface.
+Payloads are id-keyed and object-free on the bus — CARAT's tuner RNG
+crosses as serialized stream state inside the observation/decision
+messages — so the same protocol runs unchanged over the cross-process
+and cross-host transports in ``repro.core.runtime.transport``
+(:class:`MultiprocessBus` pipes, :class:`SocketBus` TCP frames, and the
+spawn/join :class:`ProcessRuntime` worker lifecycle).
 """
 from __future__ import annotations
 

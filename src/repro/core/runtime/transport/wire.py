@@ -1,0 +1,191 @@
+"""The bus wire format: ``to_wire``/``from_wire`` round-trip contract.
+
+Every payload crossing a process or host boundary goes through this
+module — it is the one place that decides what may travel. The encoding
+is a tagged tree of plain Python values (safe to pickle *or* msgpack):
+
+* atoms pass through: ``None``/``bool``/``int``/``float``/``str`` and
+  ``bytes`` (opaque pre-pickled blobs — policy snapshots, worker
+  reports — are first-class on purpose: the transport must not need to
+  understand them);
+* containers become tagged tuples: ``("tu", items)``, ``("li", items)``,
+  ``("di", pairs)`` — user tuples are always wrapped, so a tag can never
+  collide with user data;
+* numpy crosses as raw buffers: ``("nd", dtype, shape, bytes)`` for
+  arrays, ``("n0", dtype, bytes)`` for scalars — value- and dtype-exact,
+  which the bit-identity gates require;
+* registered payload dataclasses (:class:`~repro.storage.client.
+  ChannelDemand`, :class:`~repro.core.cache_tuner.CacheDemand`,
+  ``DemandBatch``, :class:`~repro.core.runtime.bus.BusMessage`) carry
+  their own ``to_wire``/``from_wire`` contract or a structural encoder
+  here;
+* **everything else raises** :class:`WireError`. That is the point:
+  threads, locks, sockets, controller shells, clients, and live RNG
+  generators must never leak onto the bus (serialized RNG *state* — a
+  plain dict from :meth:`repro.utils.rng.RngStream.state` — travels
+  fine). caratlint CL006 enforces the same contract statically at
+  ``publish`` call sites; this module enforces it at runtime on every
+  cross-process publish.
+
+``assert_wire_safe(payload)`` is the cheap test/debug hook: encode and
+discard.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import numpy as np
+
+__all__ = ["WireError", "to_wire", "from_wire", "assert_wire_safe"]
+
+
+class WireError(TypeError):
+    """A payload referenced something that must not cross the bus."""
+
+
+_ATOMS = (bool, int, float, str, bytes)
+
+# tag -> decoder; encoders dispatch on type below
+_DECODERS: Dict[str, Callable[[tuple], Any]] = {}
+
+
+def _decoder(tag: str):
+    def reg(fn):
+        _DECODERS[tag] = fn
+        return fn
+    return reg
+
+
+# --------------------------------------------------------------- registry
+# Payload classes with a to_wire/from_wire contract of their own, plus
+# structural encoders for the array-shaped ones. Imported lazily: wire
+# sits under core.runtime and must not create import cycles with
+# storage at module load.
+def _registry() -> Dict[type, Tuple[str, Callable]]:
+    from repro.core.cache_tuner import CacheDemand
+    from repro.core.runtime.bus import BusMessage
+    from repro.storage.client import ChannelDemand
+    from repro.storage.soa import DemandBatch
+    return {
+        ChannelDemand: ("cd", lambda o: o.to_wire()),
+        CacheDemand: ("c2", lambda o: o.to_wire()),
+        DemandBatch: ("db", lambda o: tuple(
+            _encode(getattr(o, f))
+            for f in ("ost", "rpc_rate", "rpc_pages", "window", "ordinal"))),
+        BusMessage: ("bm", lambda o: (o.topic, _encode(o.shard),
+                                      int(o.interval), _encode(o.payload))),
+    }
+
+
+_REG_CACHE: Dict[type, Tuple[str, Callable]] = {}
+
+
+def _reg() -> Dict[type, Tuple[str, Callable]]:
+    if not _REG_CACHE:
+        _REG_CACHE.update(_registry())
+    return _REG_CACHE
+
+
+@_decoder("cd")
+def _dec_channel_demand(data):
+    from repro.storage.client import ChannelDemand
+    return ChannelDemand.from_wire(data)
+
+
+@_decoder("c2")
+def _dec_cache_demand(data):
+    from repro.core.cache_tuner import CacheDemand
+    return CacheDemand.from_wire(data)
+
+
+@_decoder("db")
+def _dec_demand_batch(data):
+    from repro.storage.soa import DemandBatch
+    ost, rate, pages, window, ordinal = (_decode(x) for x in data)
+    return DemandBatch(ost=ost, rpc_rate=rate, rpc_pages=pages,
+                       window=window, ordinal=ordinal)
+
+
+@_decoder("bm")
+def _dec_bus_message(data):
+    from repro.core.runtime.bus import BusMessage
+    topic, shard, interval, payload = data
+    return BusMessage(topic, _decode(shard), int(interval),
+                      _decode(payload))
+
+
+# --------------------------------------------------------------- encoding
+def _encode(obj: Any) -> Any:
+    if obj is None:
+        return None
+    # bool before int (bool is an int subclass); exact types only — a
+    # subclass smuggling extra state must not silently flatten
+    t = type(obj)
+    if t in (bool, int, float, str, bytes):
+        return obj
+    if t is tuple:
+        return ("tu", tuple(_encode(x) for x in obj))
+    if t is list:
+        return ("li", tuple(_encode(x) for x in obj))
+    if t is dict:
+        return ("di", tuple((_encode(k), _encode(v))
+                            for k, v in obj.items()))
+    if isinstance(obj, np.ndarray):
+        if obj.dtype.hasobject:
+            raise WireError("object-dtype ndarray cannot cross the bus")
+        a = np.ascontiguousarray(obj)
+        return ("nd", a.dtype.str, tuple(a.shape), a.tobytes())
+    if isinstance(obj, np.generic):
+        return ("n0", obj.dtype.str, obj.tobytes())
+    reg = _reg().get(t)
+    if reg is not None:
+        tag, enc = reg
+        return (tag, enc(obj))
+    if isinstance(obj, _ATOMS):            # e.g. a str/int subclass
+        raise WireError(
+            f"{t.__module__}.{t.__name__} subclasses a wire atom but may "
+            f"carry extra state; convert to the plain type before publish")
+    raise WireError(
+        f"payload of type {t.__module__}.{t.__name__} is not wire-safe: "
+        f"only plain atoms, containers, numpy buffers, and registered "
+        f"payload dataclasses cross the bus (no live objects — serialize "
+        f"state instead; see transport.wire and CONTRIBUTING.md CL006)")
+
+
+def _decode(node: Any) -> Any:
+    if node is None or type(node) in (bool, int, float, str, bytes):
+        return node
+    tag = node[0]
+    if tag == "tu":
+        return tuple(_decode(x) for x in node[1])
+    if tag == "li":
+        return [_decode(x) for x in node[1]]
+    if tag == "di":
+        return {_decode(k): _decode(v) for k, v in node[1]}
+    if tag == "nd":
+        _, dtype, shape, buf = node
+        return np.frombuffer(buf, dtype=np.dtype(dtype)).reshape(shape).copy()
+    if tag == "n0":
+        _, dtype, buf = node
+        return np.frombuffer(buf, dtype=np.dtype(dtype))[0]
+    dec = _DECODERS.get(tag)
+    if dec is None:
+        raise WireError(f"unknown wire tag {tag!r}")
+    return dec(node[1])
+
+
+def to_wire(payload: Any) -> Any:
+    """Encode a bus payload as a tagged plain-value tree (or raise
+    :class:`WireError` if anything in it must not cross the bus)."""
+    return _encode(payload)
+
+
+def from_wire(node: Any) -> Any:
+    """Invert :func:`to_wire`."""
+    return _decode(node)
+
+
+def assert_wire_safe(payload: Any) -> None:
+    """Raise :class:`WireError` if ``payload`` could not cross a
+    process/host bus transport. Encodes and discards."""
+    _encode(payload)

@@ -1,6 +1,8 @@
 """Fault tolerance + elasticity for 1000+ node runs.
 
-Three cooperating pieces:
+Cooperating pieces (``HeartbeatTracker`` is shared with the bus
+transports in ``repro.core.runtime.transport``, which use it to detect
+dead shard workers and socket peers):
 
 * ``ClusterMonitor`` — heartbeat bookkeeping with failure injection. A
   host that misses ``miss_limit`` consecutive heartbeats is declared dead;
@@ -21,14 +23,58 @@ Three cooperating pieces:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
 from repro.utils.logging import get_logger
 
 log = get_logger("runtime.ft")
+
+
+class HeartbeatTracker:
+    """Wall-clock heartbeat bookkeeping for transport peers.
+
+    The bus-transport twin of :class:`ClusterMonitor`: where the monitor
+    counts *missed monitoring intervals* for mesh hosts, this tracks the
+    last wall-clock beat (and last reported probe interval) per named
+    peer — shard workers, socket clients — so a coordinator can tell a
+    straggling peer from a dead one without a global tick. Peers are
+    registered implicitly by their first :meth:`beat`.
+    """
+
+    def __init__(self, timeout_s: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = float(timeout_s)
+        self._clock = clock
+        self._last: Dict[object, float] = {}
+        self._interval: Dict[object, int] = {}
+
+    def beat(self, peer: object, interval: Optional[int] = None) -> None:
+        self._last[peer] = self._clock()
+        if interval is not None:
+            self._interval[peer] = int(interval)
+
+    def forget(self, peer: object) -> None:
+        """Drop a peer that left on purpose (clean shutdown, re-mesh)."""
+        self._last.pop(peer, None)
+        self._interval.pop(peer, None)
+
+    def peers(self) -> Set[object]:
+        return set(self._last)
+
+    def interval(self, peer: object) -> int:
+        """Last probe interval the peer reported (0 before any report)."""
+        return self._interval.get(peer, 0)
+
+    def alive(self) -> Set[object]:
+        cutoff = self._clock() - self.timeout_s
+        return {p for p, t in self._last.items() if t >= cutoff}
+
+    def dead(self) -> Set[object]:
+        return self.peers() - self.alive()
 
 
 @dataclass

@@ -29,6 +29,27 @@ class RngStream:
     def fork(self, name: str) -> "RngStream":
         return RngStream(self.seed, f"{self.name}/{name}")
 
+    # Wire-safe state -----------------------------------------------------
+    # A stream's exact position serializes to a plain nested dict of
+    # ints/strs (PCG64's documented state), so bus payloads can carry
+    # "resume this generator here" instead of a live object reference.
+    def state(self) -> dict:
+        return {"seed": self.seed, "name": self.name,
+                "gen": self.gen.bit_generator.state}
+
+    def set_state(self, state: dict) -> None:
+        """Install a serialized position into this stream's generator.
+        The stream keeps its own identity (seed/name); only the
+        generator position moves — installing a state captured from the
+        same stream resumes it bit-exactly."""
+        self.gen.bit_generator.state = state["gen"]
+
+    @classmethod
+    def from_state(cls, state: dict) -> "RngStream":
+        s = cls(state["seed"], state["name"])
+        s.gen.bit_generator.state = state["gen"]
+        return s
+
     # Convenience pass-throughs -------------------------------------------------
     def uniform(self, lo=0.0, hi=1.0, size=None):
         return self.gen.uniform(lo, hi, size)

@@ -40,6 +40,7 @@ def fixture_config() -> LintConfig:
             "CL003": [f"{FIXDIR}/cl003_bad.py"],
             "CL004": [f"{FIXDIR}/cl004_bad.py"],
             "CL005": [f"{FIXDIR}/cl005_bad.py"],
+            "CL006": [f"{FIXDIR}/cl006_bad.py"],
         },
         cl001_allowed=[],
         cl002_entries=["cl002_pkg.entry"],
@@ -63,6 +64,7 @@ def lint_fixture(path: str):
     (f"{FIXDIR}/cl001_bad.py", "CL001", 2),
     (f"{FIXDIR}/cl003_bad.py", "CL003", 1),
     (f"{FIXDIR}/cl004_bad.py", "CL004", 1),
+    (f"{FIXDIR}/cl006_bad.py", "CL006", 1),
 ])
 def test_rule_fires_on_markers_and_respects_suppressions(
         fixture, code, n_suppressed):
@@ -120,6 +122,25 @@ def test_cl005_lifecycle_and_registry():
     assert "Suppressed" not in msgs
     assert result.suppressed == 1
     assert len(result.findings) == 6
+
+
+def test_cl006_bus_payload_purity():
+    result = lint_fixture(f"{FIXDIR}/cl006_bad.py")
+    assert {f.code for f in result.findings} == {"CL006"}
+    msgs = "\n".join(f.message for f in result.findings)
+    assert "bare `self`" in msgs
+    assert "generator/tuner" in msgs                   # .rng / .tuner chains
+    assert "lambda" in msgs
+    assert "threading.Lock" in msgs and "threading.Thread" in msgs
+    assert "socket.socket" in msgs
+    assert "constructs open inline" in msgs
+    assert "RngStream" in msgs
+    # clean publishes (extracted state, rng.state(), kwargs form) pass:
+    # every finding sits on a marked line, nothing fires in good()
+    good_lines = set(range(17, 25))
+    assert not any(f.line in good_lines for f in result.findings)
+    assert result.suppressed == 1
+    assert len(result.findings) == 9
 
 
 def test_cl004_flags_every_hygiene_class():
@@ -220,7 +241,7 @@ def test_fixtures_are_excluded_from_repo_runs():
 
 def test_rule_catalogue_complete():
     codes = [r.code for r in RULES]
-    assert codes == ["CL001", "CL002", "CL003", "CL004", "CL005"]
+    assert codes == ["CL001", "CL002", "CL003", "CL004", "CL005", "CL006"]
     for rule in RULES:
         assert rule.name and rule.contract
 

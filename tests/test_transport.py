@@ -1,0 +1,370 @@
+"""Cross-process transport suite: bus conformance over every transport
+(identical delivery AND identical accounting counters), RNG-as-state
+identity between process-mode and in-process runs, snapshot/restore
+under failure injection, mid-run repartitioning, and the socket
+transport's reconnect/backoff contract."""
+import socket
+import threading
+import time
+from contextlib import contextmanager
+
+import numpy as np
+import pytest
+
+from repro.config.types import CaratConfig
+from repro.core import CaratPolicy, default_spaces
+from repro.core.runtime import InProcessBus
+from repro.core.runtime.transport import (BusDisconnected, KillShard,
+                                          MultiprocessBus, ProcessRuntime,
+                                          Repartition, SocketBus,
+                                          SocketBusHost, WireError)
+from repro.storage import Simulation, get_workload
+
+SPACES = default_spaces()
+BURSTY = ("dlio_bert", "dlio_bert", "dlio_megatron", "s_wr_sq_1m")
+
+
+class _SyntheticModel:
+    """Deterministic, batch-invariant pseudo-probabilities in [0, 1].
+
+    A module-level class (not a closure) because the sim — models
+    included — is pickled into spawned worker processes.
+    """
+
+    def __init__(self, salt: float):
+        self.salt = salt
+
+    def __call__(self, X):
+        z = np.sin(X.astype(np.float64).sum(axis=1) * 12.9898 + self.salt)
+        return (z + 1.0) / 2.0
+
+
+def _models():
+    return {"read": _SyntheticModel(0.0), "write": _SyntheticModel(1.7)}
+
+
+def _fleet_sim(n_nodes=2, cpn=2, seed=11, **kw):
+    n = n_nodes * cpn
+    wls = [get_workload(BURSTY[i % len(BURSTY)]) for i in range(n)]
+    return Simulation(wls, seed=seed,
+                      topology=[i // cpn for i in range(n)], **kw)
+
+
+def _signature(sim, policy, res):
+    return ([c.config.dirty_cache_mb for c in sim.clients],
+            [(c.config.rpc_window_pages, c.config.rpcs_in_flight)
+             for c in sim.clients],
+            getattr(policy, "decisions", None),
+            res.app_read_bytes, res.app_write_bytes, res.client_throughput)
+
+
+# ============================================= S1: transport conformance
+KINDS = ["inprocess", "pipe", "socket"]
+
+
+@contextmanager
+def _bus(kind):
+    """A worker-side bus handle for each transport, torn down after."""
+    if kind == "inprocess":
+        yield InProcessBus()
+    elif kind == "pipe":
+        hub = MultiprocessBus().start()
+        ep = hub.endpoint("w0")
+        try:
+            yield ep
+        finally:
+            ep.close()
+            hub.close()
+    else:
+        host = SocketBusHost()
+        cli = SocketBus(host.address, peer="w0")
+        try:
+            yield cli
+        finally:
+            cli.close()
+            host.close()
+
+
+def _drive(bus):
+    """One fixed publish/consume/latest/wait script; returns everything
+    observable — deliveries and the full accounting counters — so the
+    conformance test can compare transports counter-for-counter."""
+    log = []
+    # queued topic with a staleness bound: one fresh, one over-stale,
+    # one delivered at staleness 1
+    bus.publish("obs/0", 0, 5, ("o", 5, [1.5, 2.0]))
+    bus.publish("obs/0", 1, 1, ("late", 1, None))
+    bus.publish("obs/0", 1, 4, {"cid": 7, "f": 0.25})
+    got = bus.consume("obs/0", now=5, max_staleness=2)
+    log.append([(m.shard, m.interval, m.payload) for m in got])
+    # unbounded consume drains; a second consume sees nothing
+    bus.publish("dec/0", "coordinator", 5, [(0, (3, 4))])
+    log.append([(m.shard, m.interval, m.payload)
+                for m in bus.consume("dec/0")])
+    log.append(bus.consume("dec/0"))
+    # retained latest: one slot per shard, exclude + staleness filtered,
+    # never visible to consume
+    for (s, i, p) in [(0, 4, "a"), (0, 6, "b"), (1, 6, "c"), (2, 1, "old")]:
+        bus.publish("demand", s, i, p, retain=True)
+    lat = bus.latest("demand", now=6, max_staleness=3, exclude_shard=1)
+    log.append(sorted((m.shard, m.interval, m.payload) for m in lat))
+    log.append(bus.consume("demand"))
+    bus.wait(0.02)                       # exercised, timing not asserted
+    log.append(bus.stats())
+    return log
+
+
+def test_conformance_identical_across_all_transports():
+    """Every transport delivers the same messages AND reports the same
+    BusAccounting counters for the same traffic (S1)."""
+    logs = {}
+    for kind in KINDS:
+        with _bus(kind) as bus:
+            logs[kind] = _drive(bus)
+    assert logs["pipe"] == logs["inprocess"]
+    assert logs["socket"] == logs["inprocess"]
+    # and the reference itself is what the accounting contract promises
+    assert logs["inprocess"][-1] == {
+        "published": 8, "consumed": 4,
+        "dropped_stale": 1, "max_staleness_seen": 1}
+    assert logs["inprocess"][0] == [(0, 5, ("o", 5, [1.5, 2.0])),
+                                    (1, 4, {"cid": 7, "f": 0.25})]
+    assert logs["inprocess"][3] == [(0, 6, "b")]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_numpy_payload_value_and_dtype_exact(kind):
+    a = (np.arange(6, dtype=np.float32) / 3.0).reshape(2, 3)
+    with _bus(kind) as bus:
+        bus.publish("t", 0, 0, ("feat", a))
+        [m] = bus.consume("t")
+        tag, b = m.payload
+        assert tag == "feat"
+        assert b.dtype == a.dtype and np.array_equal(b, a)
+
+
+@pytest.mark.parametrize("kind", ["pipe", "socket"])
+def test_transports_reject_live_payloads_at_publish(kind):
+    """Purity is enforced in the publishing process, and a rejected
+    publish does not wedge the bus."""
+    with _bus(kind) as bus:
+        with pytest.raises(WireError):
+            bus.publish("t", 0, 0, threading.Lock())
+        bus.publish("t", 0, 0, "still serving")
+        assert [m.payload for m in bus.consume("t")] == ["still serving"]
+
+
+def test_hub_parent_publish_round_trips_wire():
+    # the coordinator must not be the one path that can leak a live
+    # object onto the bus
+    with MultiprocessBus() as hub:
+        with pytest.raises(WireError):
+            hub.publish("t", "coordinator", 0, threading.Lock())
+        host = SocketBusHost()
+        try:
+            with pytest.raises(WireError):
+                host.publish("t", "coordinator", 0, threading.Lock())
+        finally:
+            host.close()
+
+
+def test_pipe_wait_wakes_on_parent_publish():
+    """A parked cross-process wait is answered when traffic arrives,
+    not only at its deadline."""
+    with MultiprocessBus() as hub:
+        ep = hub.endpoint("w0")
+        try:
+            threading.Timer(0.15, lambda: hub.publish(
+                "tick", "coordinator", 0, None)).start()
+            t0 = time.monotonic()
+            ep.wait(10.0)
+            assert time.monotonic() - t0 < 5.0
+        finally:
+            ep.close()
+
+
+@pytest.mark.parametrize("kind", ["pipe", "socket"])
+def test_heartbeats_reach_the_hub(kind):
+    if kind == "pipe":
+        with MultiprocessBus() as hub:
+            ep = hub.endpoint("w0")
+            try:
+                ep.beat(7)
+                assert hub.heartbeats.interval("w0") == 7
+                assert "w0" in hub.heartbeats.peers()
+            finally:
+                ep.close()
+    else:
+        host = SocketBusHost()
+        cli = SocketBus(host.address, peer="w0")
+        try:
+            cli.beat(7)
+            assert host.heartbeats.interval("w0") == 7
+        finally:
+            cli.close()
+            host.close()
+
+
+# ================================== socket reconnect/backoff contract
+def test_socket_client_reconnects_after_severed_connection():
+    host = SocketBusHost()
+    cli = SocketBus(host.address, peer="w0", max_retries=6,
+                    backoff_s=0.01, backoff_cap_s=0.05)
+    try:
+        cli.publish("t", 0, 0, "before")
+        for conn in list(host._conns):       # sever server-side
+            conn.shutdown(socket.SHUT_RDWR)
+        cli.stats()                          # forces detect + reconnect
+        assert cli.reconnects >= 1
+        cli.publish("t", 0, 1, "after")
+        assert [m.payload for m in cli.consume("t")] == ["before", "after"]
+    finally:
+        cli.close()
+        host.close()
+
+
+def test_socket_disconnect_after_bounded_retries():
+    host = SocketBusHost()
+    addr = host.address
+    host.close()
+    cli = SocketBus(addr, peer="w0", max_retries=2, backoff_s=0.01,
+                    backoff_cap_s=0.02, connect_timeout_s=1.0)
+    t0 = time.monotonic()
+    with pytest.raises(BusDisconnected, match="unreachable after 2"):
+        cli.publish("t", 0, 0, "x")
+    assert time.monotonic() - t0 < 10.0      # backoff stayed bounded
+
+
+# ============================ S2 + tentpole: process-mode identity gates
+def _carat_build(seed=11, cfg=None, budgets=None, trading=False,
+                 log_stage2=False):
+    def build():
+        sim = _fleet_sim(seed=seed)
+        pol = sim.attach_policy(CaratPolicy(
+            SPACES, _models(), cfg=cfg, backend="numpy",
+            node_budgets_mb=budgets, budget_trading=trading,
+            log_stage2=log_stage2))
+        return sim, pol
+    return build
+
+
+def _paired(build, duration, **prt_kw):
+    sim_a, pol_a = build()
+    res_a = sim_a.run(duration)
+    sim_b, pol_b = build()
+    prt = ProcessRuntime(sim_b, **prt_kw)
+    res_b = prt.run(duration)
+    return (_signature(sim_a, pol_a, res_a),
+            _signature(sim_b, pol_b, res_b), pol_a, pol_b, prt)
+
+
+def test_process_sync_identity_pipe_with_trading():
+    """Worker processes over pipes == single-process Simulation,
+    including the bus-routed stage-2 drain and cross-node trading."""
+    budgets = {0: 0.3 * SPACES.cache_max * 2, 1: 2.0 * SPACES.cache_max * 2}
+    sig_a, sig_b, pol_a, pol_b, _ = _paired(
+        _carat_build(budgets=budgets, trading=True), 12.0)
+    assert pol_b.boundary_count > 0          # stage-2 rode the bus
+    assert sig_a == sig_b
+    assert pol_a.boundary_count == pol_b.boundary_count
+
+
+def test_process_sync_identity_socket():
+    sig_a, sig_b, _, _, prt = _paired(
+        _carat_build(seed=7), 10.0, transport="socket")
+    assert sig_a == sig_b
+    assert prt.stats()["published"] > 0
+
+
+def test_process_rng_streams_identical_to_in_process():
+    """S2: workers rebuild per-client RngStreams from serialized state
+    and never reseed — the process-mode run consumes exactly the RNG
+    sequence the in-process run does (epsilon-greedy forces draws)."""
+    cfg = CaratConfig(tuner="epsilon_greedy")
+    build = _carat_build(cfg=cfg)
+    sim_a, pol_a = build()
+    sim_a.run(12.0)
+    states_a = {c.client_id: c.tuner.rng.state()
+                for c in pol_a.controllers}
+
+    sim_b, pol_b = build()
+    init_b = {c.client_id: c.tuner.rng.state() for c in pol_b.controllers}
+    ProcessRuntime(sim_b).run(12.0)
+    states_b = {c.client_id: c.tuner.rng.state()
+                for c in pol_b.controllers}
+
+    assert states_b != init_b, "no RNG consumed — vacuous"
+    assert states_a == states_b
+
+
+def test_kill_shard_restores_from_snapshot_identical():
+    """Failure injection: SIGKILL one worker mid-run; restore from its
+    retained snapshot and replay must keep the run decision-identical —
+    no lost client state, conserved cache-budget accounting."""
+    budgets = {0: 0.3 * SPACES.cache_max * 2, 1: 2.0 * SPACES.cache_max * 2}
+    build = _carat_build(budgets=budgets, trading=True, log_stage2=True)
+    sig_a, sig_b, _, pol_b, _ = _paired(
+        build, 12.0, events=[KillShard(at_interval=8, sid=1)],
+        snapshot_every=2)
+    assert sig_a == sig_b
+    # every stage-2 round (pre- and post-restore) conserved the budget
+    assert pol_b.stage2_events, "no stage-2 rounds fired — vacuous"
+    for _, raw, effective, _ in pol_b.stage2_events:
+        assert float(effective.sum()) <= float(raw.sum()) * (1 + 1e-12) + 1e-6
+
+
+def test_repartition_mid_run_identical():
+    """Elasticity: merge the fleet into the parent mid-run and respawn
+    it under a different shard count — client churn across workers must
+    not perturb decisions."""
+    sig_a, sig_b, _, _, _ = _paired(
+        _carat_build(seed=5), 12.0,
+        events=[Repartition(at_interval=6, n_shards=1)])
+    assert sig_a == sig_b
+
+
+def test_process_async_smoke_bounded_staleness():
+    sim = _fleet_sim(seed=3)
+    sim.attach_policy(CaratPolicy(SPACES, _models(), backend="numpy"))
+    prt = ProcessRuntime(sim, mode="async", max_staleness_intervals=2)
+    res = prt.run(8.0)
+    assert prt.stats()["max_staleness_seen"] <= 2
+    assert res.client_throughput                 # merged a real result
+    assert prt.probe_cadence()                   # per-shard cadence known
+
+
+# ------------------------------------------------- construction validation
+def _plain_sim():
+    sim = _fleet_sim()
+    sim.attach_policy(CaratPolicy(SPACES, _models(), backend="numpy"))
+    return sim
+
+
+def test_process_runtime_validation():
+    with pytest.raises(ValueError, match="mode"):
+        ProcessRuntime(_plain_sim(), mode="warp")
+    with pytest.raises(ValueError, match="transport"):
+        ProcessRuntime(_plain_sim(), transport="carrier-pigeon")
+    sim = _fleet_sim()
+    sim.attach_policy(lambda clients, t, dt: None)
+    with pytest.raises(ValueError, match="bus-capable"):
+        ProcessRuntime(sim)
+    with pytest.raises(ValueError, match="sync"):
+        ProcessRuntime(_plain_sim(), mode="async",
+                       events=[KillShard(at_interval=2, sid=0)])
+    with pytest.raises(ValueError, match="at_interval"):
+        ProcessRuntime(_plain_sim(),
+                       events=[KillShard(at_interval=-1, sid=0)])
+    with pytest.raises(ValueError, match="at_interval >= 1"):
+        ProcessRuntime(_plain_sim(),
+                       events=[Repartition(at_interval=0, n_shards=2)])
+    with pytest.raises(ValueError, match="n_shards"):
+        ProcessRuntime(_plain_sim(),
+                       events=[Repartition(at_interval=2, n_shards=0)])
+    with pytest.raises(TypeError, match="unknown event"):
+        ProcessRuntime(_plain_sim(), events=["soon"])
+    # events must fire inside the run
+    prt = ProcessRuntime(_plain_sim(),
+                         events=[KillShard(at_interval=50, sid=0)])
+    with pytest.raises(ValueError, match="last interval"):
+        prt.run(10.0)

@@ -1,0 +1,219 @@
+"""Wire round-trip contract: every payload type that may cross a
+process/host bus boundary round-trips value- and type-exactly, and
+anything alive raises :class:`WireError` at the publishing side.
+
+Property tests run under real hypothesis or the bundled fallback shim
+(tests/conftest.py), so strategies stick to the shim-supported set.
+"""
+import pickle
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_tuner import CacheDemand
+from repro.core.runtime.bus import BusMessage
+from repro.core.runtime.transport import (WireError, assert_wire_safe,
+                                          from_wire, to_wire)
+from repro.storage.client import ChannelDemand
+from repro.storage.soa import DemandBatch
+from repro.utils.rng import RngStream
+
+
+def _rt(payload):
+    return from_wire(to_wire(payload))
+
+
+# ------------------------------------------------------- plain-value trees
+ATOM = st.one_of(
+    st.just(None),
+    st.booleans(),
+    st.integers(min_value=-2**40, max_value=2**40),
+    st.floats(min_value=-1e12, max_value=1e12),
+    st.sampled_from(["", "x", "obs/3", "dirty_cache_mb", "π"]),
+    st.sampled_from([b"", b"\x00\xff", b"opaque blob"]),
+)
+KEY = st.sampled_from(["seed", "name", "gen", "k1", "k2"])
+TREE = st.one_of(
+    ATOM,
+    st.lists(ATOM, max_size=4),
+    st.tuples(ATOM, ATOM, st.lists(ATOM, max_size=3)),
+    st.lists(st.tuples(KEY, ATOM), max_size=3).map(dict),
+    st.lists(st.tuples(ATOM, st.lists(ATOM, max_size=3)), max_size=3),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(TREE)
+def test_tree_round_trip_equality(tree):
+    back = _rt(tree)
+    assert back == tree
+    assert type(back) is type(tree)
+
+
+def test_containers_keep_exact_types():
+    # tuples stay tuples, lists stay lists — the obs/decision protocol
+    # pattern-matches on them
+    assert _rt((1, [2.0, "x"], {"k": (None, True)})) == \
+        (1, [2.0, "x"], {"k": (None, True)})
+    assert type(_rt((1, 2))) is tuple
+    assert type(_rt([1, 2])) is list
+    assert type(_rt({"a": 1})) is dict
+
+
+def test_opaque_bytes_blobs_are_first_class():
+    # policy snapshots / worker reports travel as pre-pickled blobs the
+    # transport must not need to understand
+    blob = pickle.dumps({"sid": 1, "interval": 7})
+    assert _rt(blob) == blob
+    assert _rt((1, blob))[1] == blob
+
+
+# --------------------------------------------------------------- numpy
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6),
+                min_size=1, max_size=8),
+       st.sampled_from(["<f8", "<f4", "<i8", "<i4", "|b1"]))
+def test_ndarray_round_trip_value_and_dtype_exact(vals, dtype):
+    a = np.asarray(vals).astype(np.dtype(dtype))
+    b = _rt(a)
+    assert isinstance(b, np.ndarray)
+    assert b.dtype == a.dtype
+    assert b.shape == a.shape
+    assert np.array_equal(b, a)
+
+
+def test_ndarray_noncontiguous_and_multidim():
+    a = np.arange(24, dtype=np.float64).reshape(4, 6)[::2, ::3]
+    b = _rt(a)
+    assert np.array_equal(b, a) and b.dtype == a.dtype
+    # the decoded array is an owned, writable copy (no frombuffer view
+    # leaking read-only wire bytes into simulation state)
+    b[0, 0] = -1.0
+
+
+def test_numpy_scalar_round_trip():
+    for s in (np.float32(1.5), np.int64(-7), np.bool_(True)):
+        b = _rt(s)
+        assert b == s and b.dtype == s.dtype
+
+
+def test_object_dtype_ndarray_rejected():
+    with pytest.raises(WireError, match="object-dtype"):
+        to_wire(np.array([{}, None], dtype=object))
+
+
+# ----------------------------------------------------- payload dataclasses
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=99),
+       st.integers(min_value=0, max_value=7),
+       st.booleans(),
+       st.floats(min_value=0.0, max_value=1e9),
+       st.floats(min_value=0.0, max_value=256.0),
+       st.floats(min_value=0.0, max_value=64.0))
+def test_channel_demand_round_trip(cid, ost, is_read, rate, pages, window):
+    d = ChannelDemand(cid, ost, "read" if is_read else "write",
+                      rate, pages, window)
+    back = _rt(d)
+    assert type(back) is ChannelDemand
+    assert back == d
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=99), st.booleans(),
+       st.floats(min_value=0.0, max_value=1e9),
+       st.floats(min_value=0.0, max_value=1e9),
+       st.floats(min_value=0.0, max_value=1e6))
+def test_cache_demand_round_trip(cid, active, peak_c, peak_i, share):
+    d = CacheDemand(cid, active, peak_c, peak_i, share)
+    back = _rt(d)
+    assert type(back) is CacheDemand
+    assert back == d
+
+
+def test_demand_batch_round_trip():
+    d = DemandBatch(ost=np.array([0, 1, 1], dtype=np.int64),
+                    rpc_rate=np.array([5.0, 2.5, 0.0]),
+                    rpc_pages=np.array([64.0, 8.0, 1.0]),
+                    window=np.array([4.0, 4.0, 1.0]),
+                    ordinal=np.array([0, 2, 5], dtype=np.int64))
+    back = _rt(d)
+    assert type(back) is DemandBatch
+    for f in ("ost", "rpc_rate", "rpc_pages", "window", "ordinal"):
+        a, b = getattr(d, f), getattr(back, f)
+        assert b.dtype == a.dtype and np.array_equal(b, a)
+
+
+def test_bus_message_round_trip_nested():
+    m = BusMessage("obs/0", 3, 7, (42, ("read", [1.0, 2.0], None)))
+    back = _rt(m)
+    assert type(back) is BusMessage
+    assert back == m
+    # demand echoes nest payload dataclasses inside the message
+    m2 = BusMessage("demand", "coordinator", 0,
+                    [ChannelDemand(1, 0, "write", 3.0, 16.0, 4.0)])
+    assert _rt(m2) == m2
+
+
+# --------------------------------------------------- RNG state, not objects
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31),
+       st.sampled_from(["root", "tuner/7", "client/3/tuner"]))
+def test_rng_state_round_trips_and_resumes_bit_exact(seed, name):
+    rng = RngStream(seed, name)
+    rng.gen.random(5)                       # advance off the origin
+    state = rng.state()
+    twin_direct = RngStream.from_state(state)
+    twin_wire = RngStream.from_state(_rt(state))
+    assert twin_wire.seed == rng.seed and twin_wire.name == rng.name
+    assert twin_wire.gen.random(6).tolist() == \
+        twin_direct.gen.random(6).tolist()
+
+
+def test_live_rng_stream_rejected():
+    with pytest.raises(WireError, match="not wire-safe"):
+        to_wire(RngStream(0))
+
+
+# ----------------------------------------------------- live-object policing
+class _NotAPayload:
+    pass
+
+
+class _SneakyStr(str):
+    pass
+
+
+@pytest.mark.parametrize("bad", [
+    threading.Lock(),
+    threading.Event(),
+    lambda: None,
+    object(),
+    {1, 2},                     # set: unregistered container
+    _NotAPayload(),
+], ids=["lock", "event", "lambda", "object", "set", "custom-class"])
+def test_live_objects_rejected(bad):
+    with pytest.raises(WireError):
+        to_wire(bad)
+    # nesting does not launder the leak
+    with pytest.raises(WireError):
+        to_wire((1, {"k": [bad]}))
+
+
+def test_atom_subclass_rejected():
+    # a str/int subclass may smuggle extra state; the wire refuses to
+    # silently flatten it
+    with pytest.raises(WireError, match="subclasses a wire atom"):
+        to_wire(_SneakyStr("looks innocent"))
+
+
+def test_unknown_wire_tag_rejected():
+    with pytest.raises(WireError, match="unknown wire tag"):
+        from_wire(("zz", ()))
+
+
+def test_assert_wire_safe():
+    assert_wire_safe((1, "ok", [2.0], {"k": b"blob"}))
+    with pytest.raises(WireError):
+        assert_wire_safe({"inner": threading.Lock()})

@@ -45,6 +45,10 @@ class LintConfig:
         "CL004": ["src/repro/storage/device.py"],
         # policy protocol + registry round-trip (CONTRIBUTING.md §CL005)
         "CL005": ["src/repro/core/policies/*.py"],
+        # bus publish payloads stay wire-pure (CONTRIBUTING.md §CL006);
+        # scoped to the package: tests/benches deliberately publish live
+        # objects to exercise the runtime WireError twin
+        "CL006": ["src/repro/*.py"],
     })
 
     # ---- CL001 rng-discipline -------------------------------------------

@@ -1,0 +1,63 @@
+"""Seeded CL006 violations: live objects in bus publish payloads."""
+import threading
+from socket import socket
+from threading import Lock
+
+from repro.core.runtime import InProcessBus
+from repro.utils.rng import RngStream
+
+
+class ShardLike:
+    def __init__(self):
+        self.bus = InProcessBus()
+        self.rng = RngStream(0, "shard")
+        self.lock = threading.Lock()
+
+    # ------------------------------------------------------ clean payloads
+    def good(self, interval, obs):
+        self.bus.publish("obs/0", 0, interval, [(1, obs)])
+        self.bus.publish("rng/0", 0, interval, self.rng.state())
+        self.bus.publish("cfg/0", 0, interval,
+                         {"window": 64, "inflight": 4}, retain=True)
+        self.bus.publish("short", 0, interval)       # not the bus signature
+        self.bus.publish("kw", 0, interval, payload=(1, 2.5))
+
+    # ------------------------------------------------------- leaky payloads
+    def bad_self(self, interval):
+        self.bus.publish("obs/0", 0, interval, self)  # VIOLATION: bare self
+
+    def bad_live_rng(self, interval):
+        self.bus.publish("rng/0", 0, interval, self.rng)  # VIOLATION: .rng
+
+    def bad_live_tuner(self, interval, ctrl):
+        self.bus.publish("obs/0", 0, interval,
+                         (1, ctrl.tuner))  # VIOLATION: live tuner reference
+
+    def bad_lambda(self, interval):
+        self.bus.publish("dec/0", 0, interval,
+                         lambda c: c.actuate())  # VIOLATION: lambda
+
+    def bad_bound_lock(self, interval):
+        lk = Lock()
+        self.bus.publish("obs/0", 0, interval, (1, lk))  # VIOLATION: lock
+
+    def bad_bound_thread(self, interval):
+        worker = threading.Thread(target=print)
+        self.bus.publish("obs/0", 0, interval, worker)  # VIOLATION: thread
+
+    def bad_bound_socket(self, interval):
+        conn = socket()
+        self.bus.publish("obs/0", 0, interval,
+                         {"conn": conn})  # VIOLATION: socket
+
+    def bad_inline_open(self, interval):
+        self.bus.publish("obs/0", 0, interval,
+                         open("/tmp/x"))  # VIOLATION: inline open()
+
+    def bad_inline_stream(self, interval):
+        self.bus.publish("rng/0", 0, interval,
+                         RngStream(7))  # VIOLATION: inline RngStream
+
+    def suppressed(self, interval):
+        self.bus.publish("obs/0", 0, interval,
+                         self.rng)  # caratlint: disable=CL006

@@ -5,6 +5,7 @@ from tools.caratlint.rules.cl002_softdep import SoftDepImportGraphRule
 from tools.caratlint.rules.cl003_floatorder import FloatOrderContractRule
 from tools.caratlint.rules.cl004_jit import JitHygieneRule
 from tools.caratlint.rules.cl005_policy import PolicyProtocolRule
+from tools.caratlint.rules.cl006_buspurity import BusPayloadPurityRule
 
 RULES = [
     RngDisciplineRule(),
@@ -12,6 +13,7 @@ RULES = [
     FloatOrderContractRule(),
     JitHygieneRule(),
     PolicyProtocolRule(),
+    BusPayloadPurityRule(),
 ]
 
 __all__ = ["Finding", "Rule", "RULES"]

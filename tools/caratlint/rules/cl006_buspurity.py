@@ -1,0 +1,145 @@
+"""CL006 bus-payload-purity: no live objects in TuningBus publish payloads.
+
+Everything published on a :class:`TuningBus` may cross a process or
+host boundary (``repro.core.runtime.transport``), where the wire layer
+hard-fails on anything alive. In-process runs would happily carry a
+lock, a controller shell, or a live ``RngStream`` — and then process
+mode diverges or crashes. This rule enforces the wire contract
+statically, at every ``*.publish(...)`` call site in scope, so the leak
+is caught where the payload is built rather than at the first
+cross-process run.
+
+Flagged inside the payload argument (4th positional, or ``payload=``):
+
+* lambdas — never picklable, never wire-safe;
+* bare ``self`` — publishing the component itself instead of extracted
+  state (``self.attr`` reads are fine; they usually *are* the
+  extraction);
+* attribute chains ending in ``.rng`` / ``.gen`` / ``.tuner`` — live
+  generator or tuner references; serialize position instead
+  (``rng.state()`` travels, the stream does not);
+* names bound to live-resource constructors — ``threading.Lock`` and
+  friends, ``threading.Thread``, ``socket.socket``, ``open(...)``,
+  ``RngStream(...)`` — and direct constructor calls in the payload.
+
+The runtime twin of this check lives in
+``repro.core.runtime.transport.wire`` (``WireError``); see
+CONTRIBUTING.md §CL006 for the catalogue entry.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from tools.caratlint.rules.base import Finding, ImportMap, Rule, attr_chain
+
+# constructors whose results must never ride a bus payload (resolved
+# through the file's imports: `from threading import Lock` is caught)
+_FORBIDDEN_CALLS = {
+    "threading.Lock", "threading.RLock", "threading.Condition",
+    "threading.Event", "threading.Semaphore", "threading.BoundedSemaphore",
+    "threading.Barrier", "threading.Thread",
+    "socket.socket", "socket.create_connection",
+    "open",
+    "repro.utils.rng.RngStream",
+}
+# a chain *ending* on one of these is a live generator/tuner reference;
+# one more attribute (".state", ".mean_inference_s") is an extraction
+_LIVE_ATTRS = {"rng", "gen", "tuner"}
+
+_HINT = ("bus payloads must be wire-pure — plain atoms/containers, "
+         "numpy buffers, registered payload dataclasses, or serialized "
+         "state (e.g. rng.state()); see transport.wire and "
+         "CONTRIBUTING.md CL006")
+
+
+def _forbidden(target: Optional[str]) -> bool:
+    return target is not None and (
+        target in _FORBIDDEN_CALLS or target.endswith(".RngStream"))
+
+
+class BusPayloadPurityRule(Rule):
+    code = "CL006"
+    name = "bus-payload-purity"
+    contract = ("TuningBus publish payloads carry serialized state, "
+                "never live objects (locks, threads, sockets, RNG "
+                "streams, tuners, self)")
+
+    def check(self, project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files_for(self.code):
+            imports = ImportMap.of(sf.tree)
+            # name -> constructor it was bound to, file-wide (scoping by
+            # function would only matter if one file reused a name for a
+            # lock and a payload — a readability bug in its own right)
+            bound: Dict[str, str] = {}
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and isinstance(node.value, ast.Call):
+                    target = imports.resolve_call(node.value)
+                    if _forbidden(target):
+                        bound[node.targets[0].id] = target
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "publish":
+                    payload = self._payload_arg(node)
+                    if payload is not None:
+                        findings.extend(self._check_payload(
+                            sf, node, payload, imports, bound))
+        return findings
+
+    @staticmethod
+    def _payload_arg(call: ast.Call) -> Optional[ast.expr]:
+        """publish(topic, shard, interval, payload, retain=False)."""
+        if len(call.args) >= 4:
+            return call.args[3]
+        for kw in call.keywords:
+            if kw.arg == "payload":
+                return kw.value
+        return None
+
+    def _check_payload(self, sf, call: ast.Call, payload: ast.expr,
+                       imports: ImportMap, bound: Dict[str, str]
+                       ) -> List[Finding]:
+        parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(payload):
+            for child in ast.iter_child_nodes(node):
+                parent[child] = node
+        out: List[Finding] = []
+
+        def flag(node: ast.AST, what: str) -> None:
+            # anchored at the offending node (suppressions and fixture
+            # markers sit on the payload line of a multi-line call)
+            line = getattr(node, "lineno", call.lineno)
+            out.append(Finding(
+                code=self.code, path=sf.relpath, line=line,
+                end_line=getattr(node, "end_lineno", None) or line,
+                message=f"publish payload {what} — {_HINT}"))
+
+        for node in ast.walk(payload):
+            if isinstance(node, ast.Lambda):
+                flag(node, "contains a lambda")
+            elif isinstance(node, ast.Name):
+                # a Name feeding an Attribute is a read through the
+                # object (usually the extraction itself), not a leak
+                if isinstance(parent.get(node), ast.Attribute):
+                    continue
+                if node.id == "self":
+                    flag(node, "publishes bare `self` (a live component)")
+                elif node.id in bound:
+                    flag(node, f"references {node.id!r}, bound to "
+                               f"{bound[node.id]}")
+            elif isinstance(node, ast.Attribute):
+                if node.attr in _LIVE_ATTRS \
+                        and not isinstance(parent.get(node), ast.Attribute):
+                    chain = attr_chain(node) or f"...{node.attr}"
+                    flag(node, f"carries live object {chain!r} "
+                               f"(.{node.attr} is a generator/tuner "
+                               f"reference, not state)")
+            elif isinstance(node, ast.Call):
+                target = imports.resolve_call(node)
+                if _forbidden(target):
+                    flag(node, f"constructs {target} inline")
+        return out
