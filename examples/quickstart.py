@@ -386,9 +386,13 @@ def main():
 
     # transport="socket" runs the same protocol over length-prefixed
     # frames on TCP — the cross-host transport. host_address=(host, port)
-    # binds the coordinator; SocketBus(addr) clients reconnect with
-    # bounded backoff, so workers on another terminal/host can drop and
-    # rejoin. bench_transport.py gates socket identity on every run.
+    # binds the coordinator; SocketBus(addr, authkey=host.authkey)
+    # clients must present the hub's shared secret (an HMAC handshake
+    # gates every connection before any frame is deserialized) and
+    # reconnect with bounded backoff + exactly-once retry tags, so
+    # workers on another terminal/host can drop and rejoin without
+    # losing drained messages. bench_transport.py gates socket identity
+    # on every run.
     sim_sk, pol_sk = build_proc()
     prt = ProcessRuntime(sim_sk, mode="sync", transport="socket",
                          host_address=("127.0.0.1", 0))

@@ -14,8 +14,9 @@ process and host boundaries:
   :class:`PipeEndpoint` handles over multiprocessing pipes;
 * :mod:`~repro.core.runtime.transport.socket_bus` —
   :class:`SocketBusHost` / :class:`SocketBus`, the same RPC over
-  length-prefixed pickle frames on TCP, with heartbeats and bounded
-  reconnect backoff — the two-terminal / cross-host transport;
+  length-prefixed pickle frames on TCP behind a shared-secret HMAC
+  handshake (``authkey``), with heartbeats, exactly-once retries, and
+  bounded reconnect backoff — the two-terminal / cross-host transport;
 * :mod:`~repro.core.runtime.transport.fleet` —
   :class:`ProcessRuntime`, the spawn/join worker lifecycle around the
   sharded runtime: sync mode decision-identical to one process, async
@@ -27,13 +28,15 @@ from repro.core.runtime.transport.fleet import (KillShard, ProcessRuntime,
 from repro.core.runtime.transport.process_bus import (EndpointError,
                                                       MultiprocessBus,
                                                       PipeEndpoint)
-from repro.core.runtime.transport.socket_bus import (BusDisconnected,
+from repro.core.runtime.transport.socket_bus import (BusAuthError,
+                                                     BusDisconnected,
                                                      SocketBus,
                                                      SocketBusHost)
 from repro.core.runtime.transport.wire import (WireError, assert_wire_safe,
                                                from_wire, to_wire)
 
 __all__ = [
+    "BusAuthError",
     "BusDisconnected",
     "EndpointError",
     "KillShard",

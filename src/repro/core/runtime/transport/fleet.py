@@ -496,7 +496,8 @@ class ProcessRuntime:
         if self.transport == "pipe":
             ep = self.hub.endpoint(sid)
         else:
-            ep = SocketBus(self.hub.address, peer=sid)
+            ep = SocketBus(self.hub.address, peer=sid,
+                           authkey=self.hub.authkey)
         spec = _WorkerSpec(
             sid=sid, mode=self.mode, n_steps=self._n_steps,
             start_interval=start_interval,
@@ -516,7 +517,10 @@ class ProcessRuntime:
     def _respawn(self, sid: int) -> None:
         snap = None
         for m in self.bus.latest(f"snap/{sid}"):
-            if m.payload is not None:
+            # a blob from at or before the segment base describes the
+            # previous mesh (repartition re-keys the shard id space);
+            # installing it would resurrect an old client partition
+            if m.payload is not None and m.interval > self._segment_base:
                 snap = m.payload
         self._spawn(sid, self._segment_base, snap_bytes=snap)
 
@@ -704,9 +708,12 @@ class ProcessRuntime:
         for sid in old:
             self.bus.consume(f"ctl/{sid}")   # drain unconsumed yields:
             #                                  new workers may reuse sids
-            self.bus.publish(f"snap/{sid}", COORDINATOR, k, None,
-                             retain=True)    # old-partition snapshots are
-            #                                  poison for a new-mesh respawn
+            # old-partition snapshots are poison for a new-mesh respawn:
+            # retained slots are keyed per producing shard, so the None
+            # must be published AS that shard to overwrite its blob (a
+            # coordinator-keyed None would sit beside the stale slot and
+            # _respawn would still find the old-mesh snapshot)
+            self.bus.publish(f"snap/{sid}", sid, k, None, retain=True)
         self._n_shards_arg = ev.n_shards
         self._shard_map_arg = None
         self.straggler_delay_s = {}          # old sids are meaningless now

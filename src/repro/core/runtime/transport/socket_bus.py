@@ -7,30 +7,52 @@ a listening socket: an accept thread plus one daemon thread per
 connection, each speaking the frame protocol below. The coordinator
 uses the host object directly as its bus; shard workers — same machine
 or another host — connect :class:`SocketBus` clients to
-``host.address``.
+``host.address`` with ``authkey=host.authkey``.
 
-Frame protocol: every message is a 4-byte big-endian length prefix
-followed by a pickled request/response tuple. Payloads inside requests
-are **wire-encoded** (:mod:`~repro.core.runtime.transport.wire`) before
-they are framed, so pickle only ever sees tagged plain-value trees —
-no live objects, and the frame bytes are transport-portable (the wire
-tree is msgpack-able; pickle is the framing codec the container ships
-with). Requests mirror the pipe RPC: ``pub``/``con``/``lat``/``wait``/
-``stats``/``hb``/``bye``; ``wait`` blocks the connection's server
-thread on the store's condition variable — a natural cross-host
-``bus.wait``.
+Authentication: every connection starts with a shared-secret
+challenge/response handshake (the :mod:`multiprocessing.connection`
+scheme) carried in **raw fixed-size byte strings** — the host sends a
+random 32-byte challenge, the client answers with
+``HMAC-SHA256(authkey, challenge)``, and the host proves itself back
+with ``HMAC-SHA256(authkey, challenge + b"#HOST")``. Nothing a peer
+sends is deserialized before its digest verifies, so an unauthenticated
+peer can never reach the pickle codec; a client talking to an impostor
+host raises :class:`BusAuthError` instead of retrying. The host
+auto-generates ``authkey`` when none is given. The handshake
+authenticates peers only — frames are neither encrypted nor
+per-message MACed, so the port should still live on a trusted network.
+
+Frame protocol (post-handshake): every message is a 4-byte big-endian
+length prefix followed by a pickled request/response tuple. Payloads
+inside requests are **wire-encoded**
+(:mod:`~repro.core.runtime.transport.wire`) before they are framed, so
+pickle only ever sees tagged plain-value trees — no live objects, and
+the frame bytes are transport-portable (the wire tree is msgpack-able;
+pickle is the framing codec the container ships with). Client requests
+are ``("req", peer, epoch, seq, op_tuple)`` where the op tuples mirror
+the pipe RPC: ``pub``/``con``/``lat``/``wait``/``stats``/``hb``/
+``bye``; ``wait`` blocks the connection's server thread on the store's
+condition variable — a natural cross-host ``bus.wait``.
 
 Clients reconnect: any send/recv failure closes the socket and retries
 with bounded exponential backoff (``backoff_s`` doubling up to
 ``backoff_cap_s``, at most ``max_retries`` attempts) before raising
-:class:`BusDisconnected`. Each client can run a background heartbeat
-thread; the host tracks beats per peer in a
-:class:`~repro.runtime.fault_tolerance.HeartbeatTracker`
+:class:`BusDisconnected`. Retries are **exactly-once** on the store:
+each logical call carries a per-client ``(epoch, seq)`` tag and the
+host caches its last response per peer (serve → cache → send, under a
+per-peer lock), so a retry whose original was already served — a
+destructive ``con`` drain, a counter-bumping ``pub`` — is answered
+from the cache instead of re-executed, and a response frame lost in
+flight is replayed rather than surfacing as lost messages. Each client
+can run a background heartbeat thread; the host tracks beats per peer
+in a :class:`~repro.runtime.fault_tolerance.HeartbeatTracker`
 (``host.heartbeats``) so a runtime can mark silent peers dead.
 """
 from __future__ import annotations
 
+import hmac
 import pickle
+import secrets
 import socket
 import struct
 import threading
@@ -41,15 +63,33 @@ from repro.core.runtime.bus import BusMessage, InProcessBus, TuningBus
 from repro.core.runtime.transport.wire import from_wire, to_wire
 from repro.runtime.fault_tolerance import HeartbeatTracker
 
-__all__ = ["SocketBusHost", "SocketBus", "BusDisconnected"]
+__all__ = ["SocketBusHost", "SocketBus", "BusDisconnected", "BusAuthError"]
 
 _LEN = struct.Struct(">I")
 _MAX_FRAME = 256 * 1024 * 1024      # sanity bound, not a protocol limit
 _MAX_WAIT_S = 60.0                  # server-side clamp on parked waits
+_CHALLENGE_LEN = 32                 # raw bytes, fixed size — never pickled
+_DIGEST_LEN = 32                    # HMAC-SHA256
+_HOST_SUFFIX = b"#HOST"             # domain-separates the host's proof
+_HANDSHAKE_TIMEOUT_S = 10.0         # a silent scanner can't park a thread
 
 
 class BusDisconnected(ConnectionError):
     """Reconnect attempts exhausted (bounded backoff ran out)."""
+
+
+class BusAuthError(ConnectionError):
+    """The peer failed the shared-secret handshake (wrong ``authkey``,
+    or the host could not prove knowledge of ours). Never retried — a
+    key mismatch does not fix itself."""
+
+
+def _as_key(authkey) -> bytes:
+    if isinstance(authkey, str):
+        authkey = authkey.encode("utf-8")
+    if not isinstance(authkey, (bytes, bytearray)) or not authkey:
+        raise ValueError("authkey must be a non-empty bytes/str secret")
+    return bytes(authkey)
 
 
 def _send_frame(sock: socket.socket, obj: Any) -> None:
@@ -86,10 +126,14 @@ def _unpack(rows: List[tuple]) -> List[BusMessage]:
 class SocketBusHost(TuningBus):
     """The listening hub (see module docstring). ``port=0`` binds an
     ephemeral loopback port; read the bound address from
-    ``host.address``. Context-managed."""
+    ``host.address`` and the shared secret from ``host.authkey``
+    (auto-generated unless passed in). Context-managed."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 heartbeat_timeout_s: float = 30.0):
+                 heartbeat_timeout_s: float = 30.0,
+                 authkey: Optional[bytes] = None):
+        self.authkey = (_as_key(authkey) if authkey is not None
+                        else secrets.token_bytes(32))
         self._store = InProcessBus()
         self.heartbeats = HeartbeatTracker(heartbeat_timeout_s)
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -100,6 +144,12 @@ class SocketBusHost(TuningBus):
         self._stop = threading.Event()
         self._conns: List[socket.socket] = []
         self._conn_lock = threading.Lock()
+        # exactly-once retry support: last (epoch, seq, response) per
+        # peer, and a per-peer serve lock so a retry arriving on a fresh
+        # connection can't race the original connection's serve
+        self._replies: Dict[object, Tuple[object, int, tuple]] = {}
+        self._reply_lock = threading.Lock()
+        self._peer_locks: Dict[object, threading.Lock] = {}
         self._accepter = threading.Thread(target=self._accept_loop,
                                           name="socketbus-accept",
                                           daemon=True)
@@ -140,16 +190,29 @@ class SocketBusHost(TuningBus):
             threading.Thread(target=self._conn_loop, args=(conn,),
                              name="socketbus-conn", daemon=True).start()
 
+    def _handshake(self, conn: socket.socket) -> bool:
+        """Challenge/response before anything is deserialized: raw
+        fixed-size byte strings only — a peer without the key never
+        reaches the pickle codec."""
+        conn.settimeout(_HANDSHAKE_TIMEOUT_S)
+        challenge = secrets.token_bytes(_CHALLENGE_LEN)
+        conn.sendall(challenge)
+        digest = _recv_exact(conn, _DIGEST_LEN)
+        want = hmac.new(self.authkey, challenge, "sha256").digest()
+        if not hmac.compare_digest(digest, want):
+            return False
+        conn.sendall(hmac.new(self.authkey, challenge + _HOST_SUFFIX,
+                              "sha256").digest())
+        conn.settimeout(None)
+        return True
+
     def _conn_loop(self, conn: socket.socket) -> None:
         try:
+            if not self._handshake(conn):
+                return
             while not self._stop.is_set():
                 req = _recv_frame(conn)
-                try:
-                    resp = ("ok", self._serve(req))
-                except Exception as e:       # serve errors, don't die
-                    resp = ("err", f"{type(e).__name__}: {e}")
-                _send_frame(conn, resp)
-                if req[0] == "bye":
+                if not self._answer(conn, req):
                     break
         except (ConnectionError, OSError, EOFError, pickle.PickleError):
             pass
@@ -158,6 +221,40 @@ class SocketBusHost(TuningBus):
                 if conn in self._conns:
                     self._conns.remove(conn)
             conn.close()
+
+    def _answer(self, conn: socket.socket, req: tuple) -> bool:
+        """Serve one framed request; returns False on ``bye``. Tagged
+        requests get exactly-once semantics: serve → cache → send under
+        the peer's lock, so a retry (same epoch+seq, possibly on a new
+        connection after the response frame was lost) replays the cached
+        response instead of re-executing a destructive op."""
+        if req[0] != "req":                  # untagged probe — no replay
+            return self._serve_and_send(conn, req)
+        _, peer, epoch, seq, body = req
+        with self._reply_lock:
+            lock = self._peer_locks.setdefault(peer, threading.Lock())
+        with lock:
+            with self._reply_lock:
+                cached = self._replies.get(peer)
+            if cached is not None and cached[:2] == (epoch, seq):
+                _send_frame(conn, cached[2])
+                return body[0] != "bye"
+            try:
+                resp = ("ok", self._serve(body))
+            except Exception as e:           # serve errors, don't die
+                resp = ("err", f"{type(e).__name__}: {e}")
+            with self._reply_lock:
+                self._replies[peer] = (epoch, seq, resp)
+            _send_frame(conn, resp)
+        return body[0] != "bye"
+
+    def _serve_and_send(self, conn: socket.socket, body: tuple) -> bool:
+        try:
+            resp = ("ok", self._serve(body))
+        except Exception as e:
+            resp = ("err", f"{type(e).__name__}: {e}")
+        _send_frame(conn, resp)
+        return body[0] != "bye"
 
     def _serve(self, req: tuple) -> Any:
         op = req[0]
@@ -214,33 +311,45 @@ class SocketBusHost(TuningBus):
 
 class SocketBus(TuningBus):
     """Client endpoint: the four-method bus over a framed TCP connection
-    (see module docstring). Picklable — only the address, peer name, and
-    retry policy travel; the socket is (re)built lazily, which is also
-    what makes a spawned worker's copy immediately usable."""
+    (see module docstring). Needs the host's ``authkey`` — read it from
+    ``SocketBusHost.authkey`` or share a secret out of band. Picklable —
+    the address, peer name, authkey, and retry policy travel; the socket
+    is (re)built lazily, which is also what makes a spawned worker's
+    copy immediately usable (an unpickled copy gets a fresh retry epoch,
+    so its call tags never collide with its ancestor's)."""
 
     def __init__(self, address: Tuple[str, int], peer: object = "?",
+                 authkey: Optional[bytes] = None,
                  connect_timeout_s: float = 10.0, io_timeout_s: float = 120.0,
                  max_retries: int = 8, backoff_s: float = 0.05,
                  backoff_cap_s: float = 1.0):
+        if authkey is None:
+            raise ValueError(
+                "SocketBus needs the host's shared secret: pass "
+                "authkey=host.authkey (or the out-of-band key)")
         self.address = (address[0], int(address[1]))
         self.peer = peer
+        self.authkey = _as_key(authkey)
         self.connect_timeout_s = float(connect_timeout_s)
         self.io_timeout_s = float(io_timeout_s)
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
         self.backoff_cap_s = float(backoff_cap_s)
         self.reconnects = 0                 # observability: tests gate this
+        self._epoch = secrets.token_hex(8)  # unique per client instance
+        self._seq = 0
         self._sock: Optional[socket.socket] = None
         self._lock: Optional[threading.Lock] = None
         self._hb_stop: Optional[threading.Event] = None
 
     def __getstate__(self):
         return {k: getattr(self, k) for k in
-                ("address", "peer", "connect_timeout_s", "io_timeout_s",
-                 "max_retries", "backoff_s", "backoff_cap_s")}
+                ("address", "peer", "authkey", "connect_timeout_s",
+                 "io_timeout_s", "max_retries", "backoff_s",
+                 "backoff_cap_s")}
 
     def __setstate__(self, state):
-        self.__init__(state["address"], state["peer"],
+        self.__init__(state["address"], state["peer"], state["authkey"],
                       state["connect_timeout_s"], state["io_timeout_s"],
                       state["max_retries"], state["backoff_s"],
                       state["backoff_cap_s"])
@@ -251,12 +360,31 @@ class SocketBus(TuningBus):
                                         timeout=self.connect_timeout_s)
         sock.settimeout(self.io_timeout_s)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            challenge = _recv_exact(sock, _CHALLENGE_LEN)
+            sock.sendall(hmac.new(self.authkey, challenge,
+                                  "sha256").digest())
+            proof = _recv_exact(sock, _DIGEST_LEN)
+            want = hmac.new(self.authkey, challenge + _HOST_SUFFIX,
+                            "sha256").digest()
+            if not hmac.compare_digest(proof, want):
+                raise BusAuthError(
+                    f"peer {self.peer!r}: host at {self.address} failed "
+                    f"to prove knowledge of the authkey — not our hub")
+        except BaseException:
+            sock.close()
+            raise
         return sock
 
     def _call(self, *req) -> Any:
         if self._lock is None:
             self._lock = threading.Lock()
         with self._lock:
+            # one tag per logical call, reused verbatim across retries:
+            # the host replays its cached response if the original was
+            # already served (exactly-once for destructive ops)
+            seq, self._seq = self._seq, self._seq + 1
+            frame = ("req", self.peer, self._epoch, seq, req)
             attempt = 0
             while True:
                 try:
@@ -264,9 +392,12 @@ class SocketBus(TuningBus):
                         self._sock = self._connect()
                         if attempt:
                             self.reconnects += 1
-                    _send_frame(self._sock, req)
+                    _send_frame(self._sock, frame)
                     tag, data = _recv_frame(self._sock)
                     break
+                except BusAuthError:
+                    self._sock = None        # key mismatch: never retried
+                    raise
                 except (ConnectionError, OSError, EOFError,
                         pickle.PickleError):
                     if self._sock is not None:
@@ -325,7 +456,7 @@ class SocketBus(TuningBus):
             while not stop.is_set():
                 try:
                     self.beat(interval_fn() if interval_fn else None)
-                except (BusDisconnected, RuntimeError):
+                except (BusDisconnected, BusAuthError, RuntimeError):
                     return
                 stop.wait(every_s)
 
@@ -339,7 +470,7 @@ class SocketBus(TuningBus):
             self._hb_stop = None
         try:
             self._call("bye")
-        except (BusDisconnected, RuntimeError):
+        except (BusDisconnected, BusAuthError, RuntimeError):
             pass
         if self._sock is not None:
             self._sock.close()

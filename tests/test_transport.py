@@ -18,6 +18,7 @@ from repro.core.runtime.transport import (BusDisconnected, KillShard,
                                           MultiprocessBus, ProcessRuntime,
                                           Repartition, SocketBus,
                                           SocketBusHost, WireError)
+from repro.core.runtime.transport import socket_bus as socket_bus_mod
 from repro.storage import Simulation, get_workload
 
 SPACES = default_spaces()
@@ -77,7 +78,7 @@ def _bus(kind):
             hub.close()
     else:
         host = SocketBusHost()
-        cli = SocketBus(host.address, peer="w0")
+        cli = SocketBus(host.address, peer="w0", authkey=host.authkey)
         try:
             yield cli
         finally:
@@ -196,7 +197,7 @@ def test_heartbeats_reach_the_hub(kind):
                 ep.close()
     else:
         host = SocketBusHost()
-        cli = SocketBus(host.address, peer="w0")
+        cli = SocketBus(host.address, peer="w0", authkey=host.authkey)
         try:
             cli.beat(7)
             assert host.heartbeats.interval("w0") == 7
@@ -208,8 +209,8 @@ def test_heartbeats_reach_the_hub(kind):
 # ================================== socket reconnect/backoff contract
 def test_socket_client_reconnects_after_severed_connection():
     host = SocketBusHost()
-    cli = SocketBus(host.address, peer="w0", max_retries=6,
-                    backoff_s=0.01, backoff_cap_s=0.05)
+    cli = SocketBus(host.address, peer="w0", authkey=host.authkey,
+                    max_retries=6, backoff_s=0.01, backoff_cap_s=0.05)
     try:
         cli.publish("t", 0, 0, "before")
         for conn in list(host._conns):       # sever server-side
@@ -227,12 +228,107 @@ def test_socket_disconnect_after_bounded_retries():
     host = SocketBusHost()
     addr = host.address
     host.close()
-    cli = SocketBus(addr, peer="w0", max_retries=2, backoff_s=0.01,
-                    backoff_cap_s=0.02, connect_timeout_s=1.0)
+    cli = SocketBus(addr, peer="w0", authkey=b"k", max_retries=2,
+                    backoff_s=0.01, backoff_cap_s=0.02,
+                    connect_timeout_s=1.0)
     t0 = time.monotonic()
     with pytest.raises(BusDisconnected, match="unreachable after 2"):
         cli.publish("t", 0, 0, "x")
     assert time.monotonic() - t0 < 10.0      # backoff stayed bounded
+
+
+# ------------------------------------ socket authentication contract
+def test_socket_requires_authkey_and_rejects_wrong_key():
+    """The handshake gates the frame codec: a client with the wrong
+    shared secret never gets served (and exhausts its retries), while
+    an authenticated client keeps working on the same host."""
+    with pytest.raises(ValueError, match="authkey"):
+        SocketBus(("127.0.0.1", 1), peer="w0")
+    host = SocketBusHost()
+    good = SocketBus(host.address, peer="good", authkey=host.authkey)
+    bad = SocketBus(host.address, peer="evil", authkey=b"not-the-key",
+                    max_retries=2, backoff_s=0.01, backoff_cap_s=0.02)
+    try:
+        good.publish("t", 0, 0, "x")
+        with pytest.raises(BusDisconnected):
+            bad.consume("t")
+        assert [m.payload for m in good.consume("t")] == ["x"]
+    finally:
+        good.close()
+        bad.close()
+        host.close()
+
+
+def test_socket_unauthenticated_frames_never_reach_the_store():
+    """A raw peer that skips the handshake and throws a framed request
+    at the port is disconnected before anything is deserialized — the
+    store sees no traffic."""
+    import pickle
+    import struct
+    host = SocketBusHost()
+    raw = socket.create_connection(host.address, timeout=5.0)
+    try:
+        raw.settimeout(5.0)
+        raw.recv(32)                         # the challenge we can't answer
+        frame = pickle.dumps(("req", "evil", "e", 0,
+                              ("pub", "t", 0, 0, None, False)))
+        raw.sendall(struct.pack(">I", len(frame)) + frame)
+        # host reads 32 bytes of that as a bogus digest and hangs up
+        deadline = time.monotonic() + 5.0
+        closed = False
+        while time.monotonic() < deadline:
+            try:
+                if raw.recv(1024) == b"":
+                    closed = True
+                    break
+            except (ConnectionError, OSError):
+                closed = True
+                break
+        assert closed, "host kept the unauthenticated connection open"
+        assert host.stats()["published"] == 0
+    finally:
+        raw.close()
+        host.close()
+
+
+def test_socket_retry_replays_lost_response_exactly_once():
+    """Destructive ops survive a lost response frame: the host serves a
+    'con' (draining the queue), the response frame is dropped, and the
+    client's tagged retry is answered from the host's reply cache — the
+    drained messages arrive instead of vanishing, and duplicate 'pub'
+    resends cannot skew the published counter."""
+    host = SocketBusHost()
+    cli = SocketBus(host.address, peer="w0", authkey=host.authkey,
+                    backoff_s=0.01, backoff_cap_s=0.05)
+    orig = socket_bus_mod._send_frame
+    dropped = []
+
+    def flaky(sock, obj):
+        # sever the first host->client consume response after it was
+        # served and cached (host conn threads are named socketbus-conn)
+        if (not dropped
+                and threading.current_thread().name == "socketbus-conn"
+                and isinstance(obj, tuple) and obj and obj[0] == "ok"
+                and isinstance(obj[1], list) and obj[1]):
+            dropped.append(obj)
+            raise ConnectionError("injected: response frame lost")
+        orig(sock, obj)
+
+    try:
+        cli.publish("t", 0, 0, "a")
+        cli.publish("t", 0, 1, "b")
+        socket_bus_mod._send_frame = flaky
+        msgs = cli.consume("t")
+        assert dropped, "injection never fired — vacuous"
+        assert [m.payload for m in msgs] == ["a", "b"]
+        assert cli.reconnects >= 1
+        stats = host.stats()
+        assert stats["published"] == 2       # no double-publish either
+        assert stats["consumed"] == 2        # the drain ran exactly once
+    finally:
+        socket_bus_mod._send_frame = orig
+        cli.close()
+        host.close()
 
 
 # ============================ S2 + tentpole: process-mode identity gates
@@ -320,6 +416,33 @@ def test_repartition_mid_run_identical():
     sig_a, sig_b, _, _, _ = _paired(
         _carat_build(seed=5), 12.0,
         events=[Repartition(at_interval=6, n_shards=1)])
+    assert sig_a == sig_b
+
+
+def test_kill_after_repartition_never_restores_old_mesh_snapshot():
+    """A KillShard firing after a Repartition but before the new mesh's
+    first snapshot must respawn from the segment base, not a retained
+    old-partition blob (same sid, different client set): the poison is
+    keyed under the producing shard's slot and _respawn rejects blobs
+    from at or before the segment base. Old-mesh snapshots exist at
+    intervals 2/4/6; the kill at 7 lands in the unsnapshotted window of
+    the re-meshed shard 0."""
+    sig_a, sig_b, _, _, _ = _paired(
+        _carat_build(seed=5), 14.0,
+        events=[Repartition(at_interval=6, n_shards=1),
+                KillShard(at_interval=7, sid=0)],
+        snapshot_every=2)
+    assert sig_a == sig_b
+
+
+def test_kill_after_repartition_with_new_mesh_snapshot_identical():
+    """Once the re-meshed worker has published its own snapshot, a later
+    kill restores from that (new-mesh) blob and stays identical."""
+    sig_a, sig_b, _, _, _ = _paired(
+        _carat_build(seed=5), 14.0,
+        events=[Repartition(at_interval=6, n_shards=1),
+                KillShard(at_interval=11, sid=0)],
+        snapshot_every=2)
     assert sig_a == sig_b
 
 
