@@ -250,7 +250,16 @@ def main(argv=None):
 
     failures = []
     report = {"smoke": bool(args.smoke), "nodes": n_nodes,
-              "clients_per_node": cpn}
+              "clients_per_node": cpn,
+              # perf_trend noise classes: async cadence metrics are
+              # sleep-scheduled wall clock — null skips the injected
+              # delay (a constant we set, not a measurement), a number
+              # widens the threshold for genuinely noisy cadences
+              "_noise": {
+                  "async_runs[*].injected_delay_ms": None,
+                  "async_runs[*].cadence_*_ms": 1.0,
+                  "async_runs[*].straggler_cadence_ms": 1.0,
+              }}
 
     # -- 1. sync-mode decision identity --------------------------------------
     ok_fleet, n_shards, n_bounds, n_dec = sync_identity_fleet(

@@ -42,8 +42,8 @@ sys.path.insert(0, "benchmarks")
 from common import emit  # noqa: E402
 from bench_sharded import build_fleet, signature  # noqa: E402
 
-from repro.core.runtime.transport import (ProcessRuntime,  # noqa: E402
-                                          Repartition)
+from repro.core.runtime.transport import (KillShard,  # noqa: E402
+                                          ProcessRuntime, Repartition)
 
 
 def process_sync_identity(n_nodes, clients_per_node, duration,
@@ -112,7 +112,16 @@ def main(argv=None):
 
     failures = []
     report = {"smoke": bool(args.smoke), "nodes": n_nodes,
-              "clients_per_node": cpn}
+              "clients_per_node": cpn,
+              # perf_trend noise classes: async cadence metrics are
+              # sleep-scheduled wall clock — null skips the injected
+              # delay (a constant we set, not a measurement), a number
+              # widens the threshold for genuinely noisy cadences
+              "_noise": {
+                  "async_runs[*].injected_delay_ms": None,
+                  "async_runs[*].cadence_*_ms": 1.0,
+                  "async_runs[*].straggler_cadence_ms": 1.0,
+              }}
 
     # -- 1/2. spawn-fleet sync identity, both transports ---------------------
     for transport in ("pipe", "socket"):
@@ -137,6 +146,40 @@ def main(argv=None):
     if not ok:
         failures.append("mid-run repartition (merge + respawn under a new "
                         "shard count) perturbed decisions")
+
+    # -- 3b. telemetry artifacts: kill-run trace + flight dumps --------------
+    # the CI-artifact half of the telemetry acceptance gate: a fleet run
+    # with a worker killed mid-run, telemetry on, must stay identical
+    # AND leave a Perfetto-loadable trace plus a readable flight dump
+    ok, prt = process_sync_identity(
+        n_nodes, cpn, duration, "pipe",
+        events=[KillShard(at_interval=n_steps // 2, sid=1)],
+        snapshot_every=2, telemetry=True, flight_dir="FLIGHT_transport")
+    col = prt.telemetry
+    trace_path = col.write_trace("TRACE_transport.json")
+    with open(trace_path) as f:
+        trace_doc = json.load(f)             # must load back as JSON
+    report["sync_identical_telemetry_kill"] = ok
+    report["telemetry"] = {
+        "trace_events": len(trace_doc["traceEvents"]),
+        "sources": col.sources(),
+        "clock_offsets": col.clock_offsets(),
+        "ring_dropped": col.dropped(),
+        "flight_dumps": col.flight_paths,
+    }
+    emit("transport_telemetry_kill", 0.0,
+         f"identical={ok}|trace_events={len(trace_doc['traceEvents'])}|"
+         f"flight_dumps={len(col.flight_paths)}")
+    if not ok:
+        failures.append("telemetry-enabled kill run diverged from the "
+                        "single-process Simulation")
+    if not any("KillShard" in p for p in col.flight_paths):
+        failures.append("KillShard left no flight dump (postmortem "
+                        "pipeline is broken)")
+    span_phases = {e["ph"] for e in trace_doc["traceEvents"]}
+    if not {"M", "X", "C"} <= span_phases:
+        failures.append(f"exported trace is missing event phases "
+                        f"({sorted(span_phases)} of M/X/C)")
 
     # -- 4. async process straggler tolerance --------------------------------
     ratio, details = async_process_straggler(n_nodes, cpn, async_duration)

@@ -18,10 +18,21 @@ gates live in the benches themselves); ``--strict`` exits 1 when any
 regression crosses the threshold. Baselines absent from HEAD (a brand
 new bench) and sub-threshold timings (< 1 ms, pure noise) are skipped.
 
+Per-metric noise classes: a report may carry a top-level ``_noise``
+mapping of ``fnmatch`` patterns (matched against the flattened dotted
+path, ``[i]`` indices included) to thresholds. A matching metric uses
+that threshold instead of ``--threshold``; ``null`` skips the metric
+entirely. The *committed* (HEAD) mapping wins — a regressing change
+must not be able to relax its own gates in the same commit. Underscore-
+prefixed keys (``_noise`` itself included) are never treated as
+metrics. Async wall-clock cadence metrics (sleep-driven scheduling, CI
+box jitter) are the intended customers.
+
 Usage:
     python benchmarks/perf_trend.py [--threshold 0.2] [--strict] [files...]
 """
 import argparse
+import fnmatch
 import glob
 import json
 import os
@@ -46,6 +57,8 @@ def _flatten(obj, prefix=""):
     """Yield (dotted_path, kind, value) for every metric-keyed number."""
     if isinstance(obj, dict):
         for k, v in obj.items():
+            if str(k).startswith("_"):       # metadata (_noise, ...)
+                continue
             path = f"{prefix}.{k}" if prefix else str(k)
             if isinstance(v, (dict, list)):
                 yield from _flatten(v, path)
@@ -73,6 +86,20 @@ def _baseline(path: str):
         return None
 
 
+def _noise_threshold(key: str, noise: dict, default: float):
+    """The effective threshold for ``key``: the first matching ``_noise``
+    pattern's value (None = skip the metric), else ``default``.
+
+    Brackets are normalized to dots on both sides before matching —
+    fnmatch would otherwise read ``[*]`` as a character class instead
+    of "any list index"."""
+    k = key.replace("[", ".").replace("]", "")
+    for pat, thr in noise.items():
+        if fnmatch.fnmatchcase(k, str(pat).replace("[", ".").replace("]", "")):
+            return thr
+    return default
+
+
 def compare(path: str, threshold: float):
     """Return (rows, regressions) for one report file."""
     base = _baseline(path)
@@ -81,16 +108,26 @@ def compare(path: str, threshold: float):
     with open(path) as f:
         cur = json.load(f)
     base_t = {k: v for k, _, v in _flatten(base)}
+    # the committed noise map wins: a regressing change must not relax
+    # its own gates in the commit under test
+    noise = base.get("_noise") if isinstance(base, dict) else None
+    noise = noise if isinstance(noise, dict) else {}
     rows, regressions = [], []
     for key, kind, now in _flatten(cur):
         was = base_t.get(key)
         if was is None or (kind == "time" and was < MIN_BASELINE_MS):
             continue
+        eff = _noise_threshold(key, noise, threshold)
+        if eff is None:
+            rows.append((f"{path}:{key}",
+                         f"{was:.4g} -> {now:.4g} (noise class: skipped)",
+                         None))
+            continue
         # normalize so ratio > 1 always means "got worse"
         ratio = now / was if kind == "time" else was / max(now, 1e-30)
         rows.append((f"{path}:{key}", f"{was:.4g} -> {now:.4g} "
                      f"({ratio - 1.0:+.1%} vs baseline)", ratio))
-        if ratio > 1.0 + threshold:
+        if ratio > 1.0 + float(eff):
             regressions.append(
                 f"{path}:{key} regressed {ratio - 1.0:+.0%} "
                 f"({was:.4g} -> {now:.4g})")

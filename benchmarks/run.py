@@ -18,6 +18,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
             million-client interval, shard->device sync equivalence)
   transport cross-process transport gates (spawned-fleet pipe/socket
             identity, elastic repartition, async process stragglers)
+  telemetry telemetry on/off overhead gate (bit-identity + wall-clock
+            envelope; span/counter micro-costs)
 
 Tooling sections (repo gates, not paper artifacts):
   lint      caratlint contract pass over src/tests/benchmarks
@@ -85,6 +87,7 @@ SECTIONS = [
     ("sharded", bench_sharded.run),
     ("soa_device", bench_soa_device.run),
     ("transport", bench_transport.run),
+    ("telemetry", bench_overhead.run_telemetry),
     # tooling sections: repo gates that ride the same harness
     ("lint", run_lint),
 ]

@@ -75,6 +75,19 @@ the fleet with nothing lost (``benchmarks/bench_transport.py`` and the
 kill+restore gate in ``benchmarks/bench_sharded.py`` hard-gate all of
 this).
 
+Part 10 turns the lights on (``repro.core.runtime.telemetry``): pass
+``telemetry=True`` (and a ``flight_dir``) to ``ProcessRuntime`` and
+every process — coordinator and spawned workers — records spans
+(plan/resolve/commit, policy observe/decide/actuate, stage-2) and bus
+counters into a preallocated ring buffer, drained over the bus each
+interval. Worker clock offsets are estimated NTP-style at handshake, so
+the exported Chrome/Perfetto trace (``write_trace``) lines every
+process up on one timeline; a killed worker leaves a flight-recorder
+postmortem JSON of its last intervals. Telemetry is off by default and
+recording never touches RNG or float order, so the run stays
+bit-identical — ``benchmarks/bench_overhead.py`` hard-gates identity
+plus the wall-clock envelope.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -400,6 +413,53 @@ def main():
     print(f"socket transport (loopback TCP): identical = "
           f"{pol_sp.decisions == pol_sk.decisions}, "
           f"bus stats {prt.stats()}")
+
+    # -- Part 10: telemetry — fleet trace, metrics, flight recorder --------
+    print("\n== telemetry: tracing the fleet, crashing a worker ==")
+    import json
+    import tempfile
+
+    from repro.core.runtime.telemetry.flight import read_dump
+
+    # same kill-run as above, telemetry on: every process records spans
+    # and bus counters into a ring buffer and drains them to the
+    # coordinator over the bus; worker clock offsets are estimated at
+    # handshake so the merged trace sits on one timeline. Recording
+    # reads clocks and writes its own buffers only — the run stays
+    # bit-identical to the telemetry-off runs above.
+    flight_dir = tempfile.mkdtemp(prefix="carat-flight-")
+    sim_tl, pol_tl = build_proc()
+    prt = ProcessRuntime(sim_tl, mode="sync", transport="pipe",
+                         events=[KillShard(at_interval=8, sid=1)],
+                         snapshot_every=2, telemetry=True,
+                         flight_dir=flight_dir)
+    prt.run(10.0)
+    col = prt.telemetry
+    print(f"telemetry on, kill+restore: still identical = "
+          f"{pol_sp.decisions == pol_tl.decisions}")
+    print(f"sources on the timeline: {col.sources()}, "
+          f"worker clock offsets (s): "
+          f"{ {s: round(o, 6) for s, o in col.clock_offsets().items()} }")
+
+    # chrome://tracing- / Perfetto-loadable trace of the whole fleet
+    trace = col.write_trace(f"{flight_dir}/trace.json")
+    with open(trace) as f:
+        n_events = len(json.load(f)["traceEvents"])
+    print(f"wrote {trace}: {n_events} trace events "
+          f"(open in Perfetto / chrome://tracing)")
+
+    # the killed worker left a postmortem: its last intervals of spans
+    # and counters, plus the final metrics snapshot
+    dump = read_dump([p for p in col.flight_paths if "KillShard" in p][0])
+    print(f"flight dump for {dump['source']} ({dump['reason']}): "
+          f"{len(dump['spans'])} spans, last metrics "
+          f"{sorted(dump['metrics']['counters'])[:3]}...")
+
+    # coordinator-side bus counters mirror the transport's own stats
+    coord = col.metrics()["coord"]["counters"]
+    print(f"coord counters: published={coord.get('bus.published'):.0f} "
+          f"consumed={coord.get('bus.consumed'):.0f} "
+          f"(bus stats {prt.stats()['published']} published)")
 
 
 if __name__ == "__main__":

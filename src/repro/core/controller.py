@@ -23,7 +23,6 @@ locally (``__call__``) or by the policy's batched ``decide_many``.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -33,6 +32,8 @@ from repro.config.types import CaratConfig
 from repro.core.cache_tuner import CacheDemand, cache_allocation
 from repro.core.policy import CaratSpaces
 from repro.core.rpc_tuner import _TunerBase, make_tuner
+from repro.core.runtime.telemetry.clock import perf_s
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.core.snapshot import Snapshot, SnapshotBuilder
 from repro.storage.client import IOClient
 from repro.storage.params import PAGE_SIZE
@@ -299,6 +300,9 @@ class CaratController:
                         client.config.rpcs_in_flight) != default:
                     client.set_rpc_config(*default)
                     self.decisions.append((t, "reprobe") + default)
+                    rec = _telemetry()
+                    if rec.enabled:
+                        rec.count("carat.reprobe")
                     return None
                 # already at default: fall through — this probe's features
                 # were measured at default, so bootstrap right away
@@ -320,7 +324,13 @@ class CaratController:
             w, f = self.spaces.rpc_candidates()[int(np.argmax(probs))]
             self.client.set_rpc_config(w, f)
             self.decisions.append((t, "bootstrap", w, f))
+            rec = _telemetry()
+            if rec.enabled:
+                rec.count("carat.bootstrap")
             return None
+        rec = _telemetry()
+        if rec.enabled:
+            rec.count("carat.probe")
         return op, feats
 
     def actuate(self, op: str, proposal: Optional[tuple], t: float,
@@ -330,11 +340,11 @@ class CaratController:
         ``tune_time_s`` is the (share of) tuner time spent producing the
         proposal, folded into the Table VIII end-to-end accounting.
         """
-        t0 = time.perf_counter()
+        t0 = perf_s()
         if proposal is not None:
             self.client.set_rpc_config(*proposal)
             self.decisions.append((t, op) + tuple(proposal))
-        self.apply_time_total += tune_time_s + time.perf_counter() - t0
+        self.apply_time_total += tune_time_s + perf_s() - t0
         self.apply_count += 1
 
     def __call__(self, client: IOClient, t: float, dt: float) -> None:
@@ -342,9 +352,9 @@ class CaratController:
         if pending is None:
             return
         op, feats = pending
-        t0 = time.perf_counter()
+        t0 = perf_s()
         proposal = self.tuner.propose(op, feats)
-        self.actuate(op, proposal, t, time.perf_counter() - t0)
+        self.actuate(op, proposal, t, perf_s() - t0)
 
     # --- Table VIII ----------------------------------------------------------
     def overheads(self) -> Dict[str, float]:

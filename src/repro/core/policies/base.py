@@ -70,6 +70,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.storage.client import IOClient
 
 
@@ -170,15 +171,19 @@ class TuningPolicy:
     def step(self, clients: Sequence[IOClient], t: float, dt: float) -> None:
         """One probe interval: observe every bound client, decide the
         pending batch in one ``decide_many`` call, actuate, finish."""
+        rec = _telemetry()
         pending: List[Tuple[IOClient, Any]] = []
-        for client in self.my_clients(clients):
-            obs = self.observe(client, t, dt)
-            if obs is not None:
-                pending.append((client, obs))
+        with rec.span("policy.observe", cat="policy"):
+            for client in self.my_clients(clients):
+                obs = self.observe(client, t, dt)
+                if obs is not None:
+                    pending.append((client, obs))
         if pending:
-            decisions = self.decide_many([obs for _, obs in pending])
-            for (client, _), decision in zip(pending, decisions):
-                self.actuate(client, decision, t)
+            with rec.span("policy.decide", cat="policy"):
+                decisions = self.decide_many([obs for _, obs in pending])
+            with rec.span("policy.actuate", cat="policy"):
+                for (client, _), decision in zip(pending, decisions):
+                    self.actuate(client, decision, t)
         self.finish_step(t)
 
     # a policy is also a plain fleet hook: (clients, t, dt) -> None
@@ -196,15 +201,19 @@ class TuningPolicy:
         shard. Only valid for policies whose per-client decisions are
         independent of the rest of the fleet.
         """
+        rec = _telemetry()
         pending: List[Tuple[IOClient, Any]] = []
-        for client in self.present_clients(clients):
-            obs = self.observe(client, t, dt)
-            if obs is not None:
-                pending.append((client, obs))
+        with rec.span("policy.observe", cat="policy"):
+            for client in self.present_clients(clients):
+                obs = self.observe(client, t, dt)
+                if obs is not None:
+                    pending.append((client, obs))
         if pending:
-            decisions = self.decide_many([obs for _, obs in pending])
-            for (client, _), decision in zip(pending, decisions):
-                self.actuate(client, decision, t)
+            with rec.span("policy.decide", cat="policy"):
+                decisions = self.decide_many([obs for _, obs in pending])
+            with rec.span("policy.actuate", cat="policy"):
+                for (client, _), decision in zip(pending, decisions):
+                    self.actuate(client, decision, t)
         self.finish_step(t)
 
     def shard_observe(self, clients: Sequence[IOClient], t: float,
@@ -213,10 +222,11 @@ class TuningPolicy:
         clients present in this shard and return ``(client_id, obs)``
         pairs to publish as observation messages."""
         out: List[Tuple[int, Any]] = []
-        for client in self.present_clients(clients):
-            obs = self.observe(client, t, dt)
-            if obs is not None:
-                out.append((client.client_id, obs))
+        with _telemetry().span("policy.observe", cat="policy"):
+            for client in self.present_clients(clients):
+                obs = self.observe(client, t, dt)
+                if obs is not None:
+                    out.append((client.client_id, obs))
         return out
 
     def bus_decide(self, obs: Sequence[Tuple[int, Any]],
@@ -233,7 +243,8 @@ class TuningPolicy:
         if self.client_ids is not None:
             rank = {cid: i for i, cid in enumerate(self.client_ids)}
             obs = sorted(obs, key=lambda p: rank.get(p[0], len(rank)))
-        decisions = self.decide_many([o for _, o in obs])
+        with _telemetry().span("policy.decide", cat="policy"):
+            decisions = self.decide_many([o for _, o in obs])
         return [(cid, d) for (cid, _), d in zip(obs, decisions)]
 
     def shard_actuate(self, clients: Sequence[IOClient],
@@ -247,8 +258,9 @@ class TuningPolicy:
         targets = resolve_bound_clients(
             f"policy {self.name!r} decision", [cid for cid, _ in decisions],
             clients)
-        for client, (_, decision) in zip(targets, decisions):
-            self.actuate(client, decision, t)
+        with _telemetry().span("policy.actuate", cat="policy"):
+            for client, (_, decision) in zip(targets, decisions):
+                self.actuate(client, decision, t)
 
     def shard_collect(self, clients: Sequence[IOClient],
                       t: float) -> List[Tuple[Any, Any]]:

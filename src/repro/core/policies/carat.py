@@ -49,7 +49,6 @@ inside one shard blob together with the shard's clients, so the
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -63,6 +62,8 @@ from repro.core.ml.gbdt import ObliviousGBDT
 from repro.core.policies.base import TuningPolicy, resolve_bound_clients
 from repro.core.policy import CaratSpaces
 from repro.core.rpc_tuner import _TunerBase, make_tuner
+from repro.core.runtime.telemetry.clock import perf_s
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.storage.client import IOClient
 from repro.utils.rng import RngStream
 
@@ -323,9 +324,9 @@ class CaratPolicy(TuningPolicy):
         fleet accounting. ``decide_many`` feeds it the shells' own RNG
         streams; ``bus_decide`` feeds it streams rebuilt from serialized
         state — same draws either way."""
-        t0 = time.perf_counter()
+        t0 = perf_s()
         proposals = self.tuner.propose_many(ops, feats, rngs=rngs)
-        elapsed = time.perf_counter() - t0
+        elapsed = perf_s() - t0
         self.batch_time_total += elapsed
         self.batch_count += 1
         self.decision_count += len(ops)
@@ -347,15 +348,20 @@ class CaratPolicy(TuningPolicy):
         targets = resolve_bound_clients(
             f"policy {self.name!r}",
             [c.client_id for c in self.controllers], clients)
+        rec = _telemetry()
         pending: List[tuple] = []
-        for ctrl, client in zip(self.controllers, targets):
-            req = ctrl.observe(client, t, dt)
-            if req is not None:
-                pending.append((ctrl, req[0], req[1]))
+        with rec.span("policy.observe", cat="policy"):
+            for ctrl, client in zip(self.controllers, targets):
+                req = ctrl.observe(client, t, dt)
+                if req is not None:
+                    pending.append((ctrl, req[0], req[1]))
         if pending:
-            decisions = self.decide_many(pending)
-            for (ctrl, op, _), (proposal, share) in zip(pending, decisions):
-                ctrl.actuate(op, proposal, t, share)
+            with rec.span("policy.decide", cat="policy"):
+                decisions = self.decide_many(pending)
+            with rec.span("policy.actuate", cat="policy"):
+                for (ctrl, op, _), (proposal, share) in zip(pending,
+                                                            decisions):
+                    ctrl.actuate(op, proposal, t, share)
         self.finish_step(t)
 
     # ------------------------------------------------------- stage-2 drain
@@ -381,7 +387,7 @@ class CaratPolicy(TuningPolicy):
         logged = ([a.collect() for a in arbs]
                   if self.stage2_events is not None else None)
         budgets = np.array([a.budget() for a in arbs], dtype=np.float64)
-        t0 = time.perf_counter()
+        t0 = perf_s()
         if self.stage2 == "batched":
             batch = CacheDemandBatch.from_rows(
                 [a.collect_rows() for a in arbs], budgets)
@@ -389,7 +395,7 @@ class CaratPolicy(TuningPolicy):
                          if self.budget_trading else batch.node_budgets_mb)
             rows = cache_allocation_many(batch, self.spaces,
                                          effective).tolist()
-            elapsed = time.perf_counter() - t0
+            elapsed = perf_s() - t0
             for a, row in zip(arbs, rows):
                 a.apply_slots(row)
         else:
@@ -401,7 +407,7 @@ class CaratPolicy(TuningPolicy):
                 effective = budgets
             allocs = [cache_allocation(d, self.spaces, float(b))
                       for d, b in zip(demands, effective)]
-            elapsed = time.perf_counter() - t0
+            elapsed = perf_s() - t0
             for a, alloc in zip(arbs, allocs):
                 a.apply(alloc)
         self.arbiter_time_total += elapsed
@@ -453,14 +459,15 @@ class CaratPolicy(TuningPolicy):
         generator (or shell) reference leaves the shard."""
         by_id = {c.client_id: c for c in clients}
         out: List[Tuple[int, tuple]] = []
-        for ctrl in self.controllers:
-            client = by_id.get(ctrl.client_id)
-            if client is None:
-                continue                    # lives on another shard
-            req = ctrl.observe(client, t, dt)
-            if req is not None:
-                out.append((ctrl.client_id,
-                            (req[0], req[1], ctrl.tuner.rng.state())))
+        with _telemetry().span("policy.observe", cat="policy"):
+            for ctrl in self.controllers:
+                client = by_id.get(ctrl.client_id)
+                if client is None:
+                    continue                # lives on another shard
+                req = ctrl.observe(client, t, dt)
+                if req is not None:
+                    out.append((ctrl.client_id,
+                                (req[0], req[1], ctrl.tuner.rng.state())))
         return out
 
     def bus_decide(self, obs: Sequence[Tuple[int, tuple]],
@@ -482,7 +489,8 @@ class CaratPolicy(TuningPolicy):
         ops = [op for _, (op, _, _) in obs]
         feats = np.stack([f for _, (_, f, _) in obs])
         rngs = [RngStream.from_state(s) for _, (_, _, s) in obs]
-        decisions = self._propose_batch(ops, feats, rngs)
+        with _telemetry().span("policy.decide", cat="policy"):
+            decisions = self._propose_batch(ops, feats, rngs)
         return [(cid, (op, proposal, share, rng.state()))
                 for (cid, (op, _f, _s)), (proposal, share), rng
                 in zip(obs, decisions, rngs)]
@@ -490,14 +498,16 @@ class CaratPolicy(TuningPolicy):
     def shard_actuate(self, clients: Sequence[IOClient],
                       decisions: Sequence[Tuple[int, tuple]],
                       t: float) -> None:
-        for cid, (op, proposal, share, rng_state) in decisions:
-            ctrl = self._shell(cid)
-            # install the coordinator's advanced stream before applying:
-            # the shell's RNG trajectory stays exactly the single-process
-            # one (and an observation dropped for staleness leaves it
-            # untouched — that draw never happened anywhere)
-            ctrl.tuner.rng.set_state(rng_state)
-            ctrl.actuate(op, proposal, t, share)
+        with _telemetry().span("policy.actuate", cat="policy"):
+            for cid, (op, proposal, share, rng_state) in decisions:
+                ctrl = self._shell(cid)
+                # install the coordinator's advanced stream before
+                # applying: the shell's RNG trajectory stays exactly the
+                # single-process one (and an observation dropped for
+                # staleness leaves it untouched — that draw never
+                # happened anywhere)
+                ctrl.tuner.rng.set_state(rng_state)
+                ctrl.actuate(op, proposal, t, share)
 
     def shard_collect(self, clients: Sequence[IOClient],
                       t: float) -> List[Tuple[int, tuple]]:
@@ -532,7 +542,7 @@ class CaratPolicy(TuningPolicy):
             logged = [[CacheDemand(cid, act, pc, pi, w)
                        for cid, act, pc, pi, w in zip(*rows)]
                       for rows in all_rows]
-        t0 = time.perf_counter()
+        t0 = perf_s()
         if self.stage2 == "batched":
             batch = CacheDemandBatch.from_rows(all_rows, budgets)
             effective = (trade_node_budgets(batch, self.spaces)
@@ -555,7 +565,7 @@ class CaratPolicy(TuningPolicy):
             # every member, so this is apply()-equivalent via apply_slots)
             rows_out = [[alloc[dd.client_id] for dd in d]
                         for d, alloc in zip(demands, allocs)]
-        elapsed = time.perf_counter() - t0
+        elapsed = perf_s() - t0
         self.arbiter_time_total += elapsed
         self.arbiter_batch_count += 1
         self.node_retune_count += len(requests)

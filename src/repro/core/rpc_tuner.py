@@ -28,12 +28,12 @@ Two entry points share each strategy's selection rule:
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.policy import CaratSpaces
+from repro.core.runtime.telemetry.clock import perf_s
 from repro.utils.rng import RngStream
 
 # A scorer maps a batch of rows (n_candidates, n_features) -> probabilities.
@@ -72,9 +72,9 @@ class _TunerBase:
         X = np.concatenate(
             [np.broadcast_to(feats, (len(self._cands), feats.shape[0])),
              self._theta], axis=1).astype(np.float32)
-        t0 = time.perf_counter()
+        t0 = perf_s()
         probs = np.asarray(self.models[op](X), dtype=np.float64).reshape(-1)
-        self.inference_time_total += time.perf_counter() - t0
+        self.inference_time_total += perf_s() - t0
         return probs
 
     def _probs_many(self, op: str, feats: np.ndarray) -> np.ndarray:
@@ -107,10 +107,10 @@ class _TunerBase:
 
     # ------------------------------------------------------------------ API
     def propose(self, op: str, feats: np.ndarray) -> Optional[Tuple[int, int]]:
-        t0 = time.perf_counter()
+        t0 = perf_s()
         probs = self._probs(op, feats)
         k = self._select(op, probs)
-        self.tune_time_total += time.perf_counter() - t0
+        self.tune_time_total += perf_s() - t0
         self.tune_count += 1
         if k is None:
             return None
@@ -133,19 +133,19 @@ class _TunerBase:
         feats = np.asarray(feats, dtype=np.float32)
         if feats.shape[0] != n:
             raise ValueError(f"{n} ops but {feats.shape[0]} feature rows")
-        t0 = time.perf_counter()
+        t0 = perf_s()
         probs = np.empty((n, len(self._cands)), dtype=np.float64)
         t_inf = 0.0
         for op in dict.fromkeys(ops):      # unique, first-appearance order
             if op not in self.models and op not in self.grid_models:
                 raise KeyError(op)         # mirror the scalar path
             rows = [i for i, o in enumerate(ops) if o == op]
-            t1 = time.perf_counter()
+            t1 = perf_s()
             probs[rows] = self._probs_many(op, feats[rows])
-            t_inf += time.perf_counter() - t1
+            t_inf += perf_s() - t1
         self.inference_time_total += t_inf
         chosen = self._select_many(ops, probs, rngs)
-        self.tune_time_total += time.perf_counter() - t0
+        self.tune_time_total += perf_s() - t0
         self.tune_count += n
         return [self._cands[int(k)] if k >= 0 else None for k in chosen]
 

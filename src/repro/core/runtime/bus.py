@@ -42,6 +42,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
+from repro.core.runtime.telemetry.recorder import active as _telemetry
+
 #: shard id the coordinator publishes under
 COORDINATOR = "coordinator"
 
@@ -102,9 +104,19 @@ class BusAccounting:
         """Apply the staleness bound to a candidate delivery, updating
         the counters. ``count_drops=False`` is the retained-latest path:
         a retained message is re-read every poll, so counting each stale
-        re-read would measure poll frequency, not messages."""
+        re-read would measure poll frequency, not messages.
+
+        This is also the single choke point where staleness-at-delivery
+        is *observed*, so the telemetry mirror
+        (``bus.staleness_at_delivery`` histogram, ``bus.consumed`` /
+        ``bus.dropped_stale`` counters) agrees with the counters here
+        by construction — the conformance suite asserts it across all
+        three transports."""
+        rec = _telemetry()
         if now is None:
             self.consumed += len(msgs)
+            if rec.enabled and msgs:
+                rec.count("bus.consumed", len(msgs))
             return msgs
         out: List[BusMessage] = []
         for m in msgs:
@@ -112,10 +124,16 @@ class BusAccounting:
             if max_staleness is not None and staleness > max_staleness:
                 if count_drops:
                     self.dropped_stale += 1
+                    if rec.enabled:
+                        rec.count("bus.dropped_stale")
                 continue
             self.max_staleness_seen = max(self.max_staleness_seen, staleness)
+            if rec.enabled:
+                rec.hist("bus.staleness_at_delivery", staleness)
             out.append(m)
         self.consumed += len(out)
+        if rec.enabled and out:
+            rec.count("bus.consumed", len(out))
         return out
 
     def stats(self) -> Dict[str, int]:
@@ -145,6 +163,9 @@ class InProcessBus(BusAccounting, TuningBus):
             else:
                 self._queues.setdefault(topic, deque()).append(msg)
             self.published += 1
+            rec = _telemetry()
+            if rec.enabled:
+                rec.count("bus.published")
             self._traffic.notify_all()
 
     def consume(self, topic: str, now: Optional[int] = None,

@@ -65,6 +65,8 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from repro.core.runtime.bus import COORDINATOR, InProcessBus, TuningBus
+from repro.core.runtime.telemetry.clock import perf_s
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.storage.pfs import PFSCluster
 from repro.storage.sim import SimResult, Simulation
 from repro.storage.soa import DemandBatch
@@ -260,7 +262,10 @@ class ShardedRuntime:
                 total = c.stats.read.app_bytes + c.stats.write.app_bytes
                 shard.series[i].append((total - shard._prev[i]) / dt)
                 shard._prev[i] = total
-        shard.step_walls.append(time.perf_counter())
+        shard.step_walls.append(perf_s())
+        rec = _telemetry()
+        if rec.enabled:
+            rec.set_interval(shard.interval)
 
     def _result(self, n_steps: int) -> SimResult:
         sim = self.sim
@@ -322,6 +327,11 @@ class ShardedRuntime:
         sim = self.sim
         dt = sim.interval_s
         t = sim.t
+        rec = _telemetry()
+        with rec.span("sync_barrier", cat="runtime"):
+            self._sync_step_body(sim, t, dt)
+
+    def _sync_step_body(self, sim, t: float, dt: float) -> None:
         for kind, policy in self._workload:
             if kind == "local":
                 for shard in self.shards:
@@ -374,15 +384,16 @@ class ShardedRuntime:
             shard.interval += 1
             shard.t = sim.t
         now = self.shards[0].interval
-        for pid, (kind, policy) in enumerate(self._tune):
-            if kind == "local":
-                for shard in self.shards:
-                    policy.step_shard(shard.clients, t, dt)
-            elif kind == "fleet":
-                self._fleet_round(pid, policy, now, t, dt,
-                                  shards=self.shards, barrier=True)
-            else:
-                policy(sim.clients, t, dt)
+        with _telemetry().span("tune_round", cat="runtime"):
+            for pid, (kind, policy) in enumerate(self._tune):
+                if kind == "local":
+                    for shard in self.shards:
+                        policy.step_shard(shard.clients, t, dt)
+                elif kind == "fleet":
+                    self._fleet_round(pid, policy, now, t, dt,
+                                      shards=self.shards, barrier=True)
+                else:
+                    policy(sim.clients, t, dt)
         for shard in self.shards:
             self._record_interval(shard)
 
@@ -420,7 +431,9 @@ class ShardedRuntime:
         if reqs:
             moved = True
             route = {m.payload[0]: m.shard for m in reqs}
-            for key, rep in policy.bus_resolve([m.payload for m in reqs], t):
+            with _telemetry().span("policy.stage2", cat="policy"):
+                replies = policy.bus_resolve([m.payload for m in reqs], t)
+            for key, rep in replies:
                 self.bus.publish(f"s2rep/{pid}/{route[key]}", COORDINATOR,
                                  now, (key, rep))
         return moved
@@ -462,54 +475,60 @@ class ShardedRuntime:
                                    sim.rng.fork(f"shard{shard.sid}"))
         try:
             for _ in range(n_steps):
-                t = shard.t
-                for pid, (kind, policy) in enumerate(self._tune):
-                    if kind == "fleet":
-                        self._drain_shard_inbox(pid, policy, shard, t)
-                for kind, policy in self._workload:
-                    policy.step_shard(shard.clients, t, dt)
-                plans = sim.plan_phase(shard.clients, t, dt)
-                if sim.core is not None:
-                    own = plans.demand_batch()
-                    self.bus.publish("demand", shard.sid, shard.interval,
-                                     own, retain=True)
-                    echoes = self.bus.latest(
-                        "demand", now=shard.interval,
-                        max_staleness=self.max_staleness,
-                        exclude_shard=shard.sid)
-                    echo = [m.payload for m in
-                            sorted(echoes, key=lambda m: str(m.shard))]
-                    # concat (not merge): own demands first, echoes after,
-                    # matching the scalar `demands + echo` arrival order
-                    fb = shard.cluster.resolve_batch(
-                        DemandBatch.concat([own] + echo), dt)
-                else:
-                    demands = [d for pl in plans for d in pl.all_demands()]
-                    self.bus.publish("demand", shard.sid, shard.interval,
-                                     demands, retain=True)
-                    echoes = self.bus.latest(
-                        "demand", now=shard.interval,
-                        max_staleness=self.max_staleness,
-                        exclude_shard=shard.sid)
-                    echo = [d for m in
-                            sorted(echoes, key=lambda m: str(m.shard))
-                            for d in m.payload]
-                    fb = shard.cluster.resolve(demands + echo, dt)
-                sim.commit_phase(shard.clients, plans, fb, dt)
-                shard.t += dt
-                shard.interval += 1
-                t = shard.t
-                if delay:
-                    time.sleep(delay)       # injected slow node
-                for pid, (kind, policy) in enumerate(self._tune):
-                    if kind == "local":
-                        policy.step_shard(shard.clients, t, dt)
-                    else:
-                        self._publish_shard_traffic(pid, policy, shard,
-                                                    t, dt)
-                self._record_interval(shard)
+                with _telemetry().span(f"shard{shard.sid}.interval",
+                                       cat="runtime"):
+                    self._shard_interval(shard, sim, dt, delay)
         except BaseException as e:          # surface on the caller thread
             errors.append(e)
+
+    def _shard_interval(self, shard: Shard, sim, dt: float,
+                        delay: float) -> None:
+        t = shard.t
+        for pid, (kind, policy) in enumerate(self._tune):
+            if kind == "fleet":
+                self._drain_shard_inbox(pid, policy, shard, t)
+        for kind, policy in self._workload:
+            policy.step_shard(shard.clients, t, dt)
+        plans = sim.plan_phase(shard.clients, t, dt)
+        if sim.core is not None:
+            own = plans.demand_batch()
+            self.bus.publish("demand", shard.sid, shard.interval,
+                             own, retain=True)
+            echoes = self.bus.latest(
+                "demand", now=shard.interval,
+                max_staleness=self.max_staleness,
+                exclude_shard=shard.sid)
+            echo = [m.payload for m in
+                    sorted(echoes, key=lambda m: str(m.shard))]
+            # concat (not merge): own demands first, echoes after,
+            # matching the scalar `demands + echo` arrival order
+            fb = shard.cluster.resolve_batch(
+                DemandBatch.concat([own] + echo), dt)
+        else:
+            demands = [d for pl in plans for d in pl.all_demands()]
+            self.bus.publish("demand", shard.sid, shard.interval,
+                             demands, retain=True)
+            echoes = self.bus.latest(
+                "demand", now=shard.interval,
+                max_staleness=self.max_staleness,
+                exclude_shard=shard.sid)
+            echo = [d for m in
+                    sorted(echoes, key=lambda m: str(m.shard))
+                    for d in m.payload]
+            fb = shard.cluster.resolve(demands + echo, dt)
+        sim.commit_phase(shard.clients, plans, fb, dt)
+        shard.t += dt
+        shard.interval += 1
+        t = shard.t
+        if delay:
+            time.sleep(delay)       # injected slow node
+        for pid, (kind, policy) in enumerate(self._tune):
+            if kind == "local":
+                policy.step_shard(shard.clients, t, dt)
+            else:
+                self._publish_shard_traffic(pid, policy, shard,
+                                            t, dt)
+        self._record_interval(shard)
 
     def _run_async(self, n_steps: int) -> None:
         errors: List[BaseException] = []

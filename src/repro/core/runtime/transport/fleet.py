@@ -70,6 +70,12 @@ from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core.runtime.bus import COORDINATOR, TuningBus
 from repro.core.runtime.sharded import Shard, ShardedRuntime
+from repro.core.runtime.telemetry.clock import estimate_offset, perf_s
+from repro.core.runtime.telemetry.collect import FleetCollector
+from repro.core.runtime.telemetry.recorder import Recorder
+from repro.core.runtime.telemetry.recorder import active as _active_rec
+from repro.core.runtime.telemetry.recorder import disable as _disable_rec
+from repro.core.runtime.telemetry.recorder import enable as _enable_rec
 from repro.core.runtime.transport.process_bus import MultiprocessBus
 from repro.core.runtime.transport.socket_bus import SocketBus, SocketBusHost
 from repro.storage.pfs import ClusterFeedback
@@ -120,6 +126,8 @@ class _WorkerSpec:
     snapshot_every: int
     timeout_s: float
     hb_every_s: float
+    telemetry: bool = False
+    telemetry_capacity: int = 8192
 
 
 def _policy_slots(rt: ShardedRuntime) -> List[tuple]:
@@ -206,6 +214,29 @@ def _await_msg(bus: TuningBus, topic: str, want_interval: int,
         bus.wait(0.005)
 
 
+def _clock_handshake(bus: TuningBus, rec: Recorder, sid: int,
+                     timeout_s: float) -> None:
+    """Estimate this worker's clock offset against the coordinator.
+
+    NTP-style over the bus: each ping publishes a ``clk`` marker and
+    waits for the parent's ``clkr/{sid}`` reply carrying its
+    ``perf_s()`` reading; :func:`estimate_offset` keeps the
+    minimum-RTT sample. The offset rides on every drained batch so the
+    exporters can place this worker's spans on the coordinator
+    timeline."""
+    seq = [0]
+
+    def ping():
+        k, seq[0] = seq[0], seq[0] + 1
+        t_send = rec.clock.now()
+        bus.publish("clk", sid, k, None)
+        m = _await_msg(bus, f"clkr/{sid}", k, timeout_s, "clock reply")
+        t_recv = rec.clock.now()
+        return t_send, t_recv, float(m.payload)
+
+    rec.clock.offset_s = estimate_offset(ping, samples=3)
+
+
 def _drain_dedup(bus: TuningBus, rt: ShardedRuntime, pid: int, policy,
                  shard: Shard, t: float) -> None:
     """The worker-side inbox drain, deduplicated by client id / request
@@ -269,6 +300,9 @@ def _worker_sync_loop(bus: TuningBus, rt: ShardedRuntime, shard: Shard,
                 _drain_dedup(bus, rt, pid, policy, shard, t)
         rt._record_interval(shard)
         bus.beat(now)
+        rec = _active_rec()
+        if rec.enabled:
+            bus.publish("telem", shard.sid, now, rec.drain())
         if spec.snapshot_every and now % spec.snapshot_every == 0:
             bus.publish(f"snap/{shard.sid}", shard.sid, now,
                         _shard_blob(rt, shard), retain=True)
@@ -287,6 +321,12 @@ def _worker_async_loop(bus: TuningBus, rt: ShardedRuntime, shard: Shard,
                 bus.publish("hb", shard.sid, shard.interval, None,
                             retain=True)
                 bus.beat(shard.interval)
+                rec = _active_rec()
+                if rec.enabled:
+                    # free-running shards drain on the heartbeat cadence
+                    # (the sync loop drains per interval instead)
+                    bus.publish("telem", shard.sid, shard.interval,
+                                rec.drain())
             except Exception:
                 return                       # hub gone; main loop will see
             stop.wait(spec.hb_every_s)
@@ -311,6 +351,10 @@ def _worker_main(endpoint: TuningBus, spec: _WorkerSpec, sim_bytes: bytes,
     optionally restore a snapshot blob, run this shard's loop, publish a
     report blob (or a traceback on failure)."""
     try:
+        if spec.telemetry:
+            rec = _enable_rec(source=f"w{spec.sid}",
+                              capacity=spec.telemetry_capacity)
+            _clock_handshake(endpoint, rec, spec.sid, spec.timeout_s)
         sim = pickle.loads(sim_bytes)
         rt = ShardedRuntime(
             sim, mode=spec.mode,
@@ -334,6 +378,13 @@ def _worker_main(endpoint: TuningBus, spec: _WorkerSpec, sim_bytes: bytes,
                 _worker_async_loop(endpoint, rt, shard, spec)
         except _Yield:
             pass                             # report current state below
+        rec = _active_rec()
+        if rec.enabled:
+            # final drain *before* the report: pipe/socket ordering means
+            # once the parent has the report, this batch is already in
+            # the store — one post-report sweep collects it
+            endpoint.publish("telem", shard.sid, shard.interval,
+                             rec.drain())
         endpoint.publish("report", shard.sid, shard.interval,
                          _shard_blob(rt, shard))
     except BaseException:
@@ -379,6 +430,10 @@ class ProcessRuntime:
         max_respawns: int = 3,
         barrier_timeout_s: float = 120.0,
         host_address: Optional[Tuple[str, int]] = None,
+        telemetry: bool = False,
+        telemetry_capacity: int = 8192,
+        flight_dir: Optional[str] = None,
+        flight_intervals: int = 8,
     ):
         if sim.core is not None:
             raise ValueError(
@@ -399,6 +454,15 @@ class ProcessRuntime:
         self.auto_restore = bool(auto_restore)
         self.max_respawns = int(max_respawns)
         self.barrier_timeout_s = float(barrier_timeout_s)
+        # telemetry: workers record into per-process rings and drain over
+        # the bus; the collector aggregates, exports traces, and feeds
+        # the flight recorder (flight_dir enables postmortem dumps)
+        self._telemetry_capacity = int(telemetry_capacity)
+        self.telemetry: Optional[FleetCollector] = (
+            FleetCollector(flight_dir=flight_dir,
+                           flight_intervals=flight_intervals)
+            if (telemetry or flight_dir) else None)
+        self._parent_rec_installed = False
         self._n_shards_arg = n_shards
         self._shard_map_arg = (dict(shard_map) if shard_map is not None
                                else None)
@@ -476,6 +540,11 @@ class ProcessRuntime:
         self._sync_seen: Dict[tuple, Set[int]] = {}
         if self.transport == "pipe":
             self.hub.start()
+        if self.telemetry is not None and not _active_rec().enabled:
+            # coordinator-side spans (resolve, coordinate rounds) join
+            # the fleet trace; restored in _shutdown
+            _enable_rec(source="coord", capacity=self._telemetry_capacity)
+            self._parent_rec_installed = True
         self._sim_bytes = pickle.dumps(sim)
         try:
             for s in self.rt.shards:
@@ -485,6 +554,11 @@ class ProcessRuntime:
             else:
                 self._run_async(n_steps)
             self._await_reports()
+            # workers drain before reporting, so one sweep after the
+            # report barrier collects every final batch
+            self._serve_telemetry()
+            if self.telemetry is not None and _active_rec().enabled:
+                self.telemetry.add(_active_rec().drain())
             for sid in sorted(self._reports):
                 self._merge_report(self._reports.pop(sid))
         finally:
@@ -505,7 +579,9 @@ class ProcessRuntime:
             max_staleness=self.max_staleness,
             straggler_delay_s=self.straggler_delay_s.get(sid, 0.0),
             snapshot_every=self.snapshot_every,
-            timeout_s=self.barrier_timeout_s, hb_every_s=0.2)
+            timeout_s=self.barrier_timeout_s, hb_every_s=0.2,
+            telemetry=self.telemetry is not None,
+            telemetry_capacity=self._telemetry_capacity)
         p = self.ctx.Process(target=_worker_main,
                              args=(ep, spec, self._sim_bytes, snap_bytes),
                              name=f"shard-{sid}", daemon=True)
@@ -531,6 +607,22 @@ class ProcessRuntime:
         for p in self._procs.values():
             p.join(timeout=5.0)
         self.hub.close()
+        if self._parent_rec_installed:
+            _disable_rec()
+            self._parent_rec_installed = False
+
+    def _serve_telemetry(self) -> None:
+        """Serve clock-handshake pings and collect drained batches —
+        called from every parent wait loop. No-op with telemetry off
+        (workers then never publish on these topics)."""
+        if self.telemetry is None:
+            return
+        bus = self.bus
+        for m in bus.consume("clk"):
+            bus.publish(f"clkr/{m.shard}", COORDINATOR, m.interval,
+                        perf_s())
+        for m in bus.consume("telem"):
+            self.telemetry.add(m.payload)
 
     # ---------------------------------------------------------- sync mode
     def _run_sync(self, n_steps: int) -> None:
@@ -553,7 +645,8 @@ class ProcessRuntime:
                                .get(c.client_id, ()))
             # the one globally-coupled phase stays in the parent: same
             # float order, same cluster RNG trajectory as one process
-            fb = sim.cluster.resolve(demands, dt)
+            with _active_rec().span("resolve", cat="sim"):
+                fb = sim.cluster.resolve(demands, dt)
             self._fb_cache[k] = (fb.scale_arr, fb.waits_arr)
             yield_next = any(isinstance(e, Repartition)
                              and e.at_interval == k + 1 for e in events)
@@ -570,6 +663,9 @@ class ProcessRuntime:
                 _kind, policy = self.rt._tune[pid]
                 self._await_sync(pid, now)
                 self._coordinate_round(pid, policy, now, sim.t)
+            rec = _active_rec()
+            if rec.enabled:
+                rec.set_interval(now)        # coord counter timeline
             k += 1
 
     def _gather_plans(self, k: int) -> Dict[int, dict]:
@@ -626,8 +722,10 @@ class ProcessRuntime:
                 reqs[m.payload[0]] = (m.shard, m.payload)
         if reqs:
             route = {key: sid for key, (sid, _) in reqs.items()}
-            for key, rep in policy.bus_resolve(
-                    [p for _, p in reqs.values()], t):
+            with _active_rec().span("policy.stage2", cat="policy"):
+                replies = policy.bus_resolve([p for _, p in reqs.values()],
+                                             t)
+            for key, rep in replies:
                 topic = f"s2rep/{pid}/{route[key]}"
                 bus.publish(topic, COORDINATOR, now, (key, rep))
                 recs.append((topic, now, (key, rep)))
@@ -641,6 +739,7 @@ class ProcessRuntime:
         reports, index plans and sync markers, re-serve cached rounds to
         replaying workers, respawn the dead."""
         bus = self.bus
+        self._serve_telemetry()
         for m in bus.consume("report"):
             data = pickle.loads(m.payload)
             if data.get("error"):
@@ -669,6 +768,11 @@ class ProcessRuntime:
         for sid, p in list(self._procs.items()):
             if p.is_alive() or sid in self._reports:
                 continue
+            if self.telemetry is not None:
+                # postmortem window for the unexpected death, from the
+                # batches this worker drained before dying
+                self._serve_telemetry()
+                self.telemetry.dump_flight(f"w{sid}", "worker-death")
             n = self._respawns.get(sid, 0) + 1
             if not self.auto_restore or n > self.max_respawns:
                 raise RuntimeError(
@@ -687,6 +791,9 @@ class ProcessRuntime:
                              f"(have {sorted(self._procs)})")
         p.kill()
         p.join(timeout=10.0)
+        if self.telemetry is not None:
+            self._serve_telemetry()
+            self.telemetry.dump_flight(f"w{ev.sid}", "KillShard")
         self._respawns[ev.sid] = 0           # injected, not a crash loop
         self._respawn(ev.sid)
 
@@ -734,6 +841,7 @@ class ProcessRuntime:
         bus = self.bus
         last_progress = time.monotonic()
         while True:
+            self._serve_telemetry()
             for m in bus.consume("report"):
                 data = pickle.loads(m.payload)
                 if data.get("error"):
@@ -775,6 +883,7 @@ class ProcessRuntime:
             if self.mode == "sync":
                 self._pump()
             else:
+                self._serve_telemetry()
                 for m in self.bus.consume("report"):
                     data = pickle.loads(m.payload)
                     if data.get("error"):

@@ -36,6 +36,8 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.runtime.bus import BusMessage, InProcessBus, TuningBus
+from repro.core.runtime.telemetry.clock import perf_s
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.core.runtime.transport.wire import from_wire, to_wire
 from repro.runtime.fault_tolerance import HeartbeatTracker
 
@@ -80,9 +82,15 @@ class PipeEndpoint(TuningBus):
     def _call(self, *req) -> Any:
         if self._lock is None:
             self._lock = threading.Lock()
+        rec = _telemetry()
+        t0 = perf_s() if rec.enabled else 0.0
         with self._lock:
             self._conn.send(req)
             tag, data = self._conn.recv()
+        if rec.enabled and req[0] != "wait":
+            # wait() parks on the hub by design; timing it would just
+            # measure the requested timeout, not transport latency
+            rec.hist("bus.rpc_ms", round((perf_s() - t0) * 1e3, 1))
         if tag == "err":
             raise EndpointError(f"bus hub rejected {req[0]!r}: {data}")
         return data

@@ -60,6 +60,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.runtime.bus import BusMessage, InProcessBus, TuningBus
+from repro.core.runtime.telemetry.clock import perf_s
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.core.runtime.transport.wire import from_wire, to_wire
 from repro.runtime.fault_tolerance import HeartbeatTracker
 
@@ -379,6 +381,8 @@ class SocketBus(TuningBus):
     def _call(self, *req) -> Any:
         if self._lock is None:
             self._lock = threading.Lock()
+        rec = _telemetry()
+        t0 = perf_s() if rec.enabled else 0.0
         with self._lock:
             # one tag per logical call, reused verbatim across retries:
             # the host replays its cached response if the original was
@@ -392,6 +396,8 @@ class SocketBus(TuningBus):
                         self._sock = self._connect()
                         if attempt:
                             self.reconnects += 1
+                            if rec.enabled:
+                                rec.count("bus.reconnects")
                     _send_frame(self._sock, frame)
                     tag, data = _recv_frame(self._sock)
                     break
@@ -412,6 +418,10 @@ class SocketBus(TuningBus):
                     # bounded exponential backoff
                     time.sleep(min(self.backoff_s * (2 ** (attempt - 1)),
                                    self.backoff_cap_s))
+        if rec.enabled and req[0] != "wait":
+            # wait() parks on the host by design; timing it would just
+            # measure the requested timeout, not transport latency
+            rec.hist("bus.rpc_ms", round((perf_s() - t0) * 1e3, 1))
         if tag == "err":
             raise RuntimeError(f"bus host rejected {req[0]!r}: {data}")
         return data

@@ -64,6 +64,8 @@ def _decoder(tag: str):
 def _registry() -> Dict[type, Tuple[str, Callable]]:
     from repro.core.cache_tuner import CacheDemand
     from repro.core.runtime.bus import BusMessage
+    from repro.core.runtime.telemetry.events import (CounterEvent,
+                                                     EventBatch, SpanEvent)
     from repro.storage.client import ChannelDemand
     from repro.storage.soa import DemandBatch
     return {
@@ -74,6 +76,18 @@ def _registry() -> Dict[type, Tuple[str, Callable]]:
             for f in ("ost", "rpc_rate", "rpc_pages", "window", "ordinal"))),
         BusMessage: ("bm", lambda o: (o.topic, _encode(o.shard),
                                       int(o.interval), _encode(o.payload))),
+        # telemetry events: drained ring-buffer data only. The live
+        # Recorder/Clock objects are deliberately unregistered — they
+        # hold locks and callables and must raise WireError.
+        SpanEvent: ("ts", lambda o: (o.name, o.cat, float(o.t0),
+                                     float(o.dur), int(o.interval))),
+        CounterEvent: ("tk", lambda o: (o.name, float(o.t), float(o.value),
+                                        int(o.interval), o.kind)),
+        EventBatch: ("tb", lambda o: (
+            o.source, float(o.clock_offset_s),
+            tuple(_encode(s) for s in o.spans),
+            tuple(_encode(c) for c in o.counters),
+            _encode(o.metrics), int(o.dropped))),
     }
 
 
@@ -112,6 +126,32 @@ def _dec_bus_message(data):
     topic, shard, interval, payload = data
     return BusMessage(topic, _decode(shard), int(interval),
                       _decode(payload))
+
+
+@_decoder("ts")
+def _dec_span_event(data):
+    from repro.core.runtime.telemetry.events import SpanEvent
+    name, cat, t0, dur, interval = data
+    return SpanEvent(name=name, cat=cat, t0=float(t0), dur=float(dur),
+                     interval=int(interval))
+
+
+@_decoder("tk")
+def _dec_counter_event(data):
+    from repro.core.runtime.telemetry.events import CounterEvent
+    name, t, value, interval, kind = data
+    return CounterEvent(name=name, t=float(t), value=float(value),
+                        interval=int(interval), kind=kind)
+
+
+@_decoder("tb")
+def _dec_event_batch(data):
+    from repro.core.runtime.telemetry.events import EventBatch
+    source, offset, spans, counters, metrics, dropped = data
+    return EventBatch(source=source, clock_offset_s=float(offset),
+                      spans=tuple(_decode(s) for s in spans),
+                      counters=tuple(_decode(c) for c in counters),
+                      metrics=_decode(metrics), dropped=int(dropped))
 
 
 # --------------------------------------------------------------- encoding

@@ -7,7 +7,6 @@ consumes. Overheads are measured per call for the Table VIII benchmark.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Optional
@@ -15,6 +14,7 @@ from typing import Deque, Optional
 import numpy as np
 
 from repro.core.metrics import Metrics, compute_metrics, normalize_features
+from repro.core.runtime.telemetry.clock import perf_s
 from repro.storage.stats import ClientStats, diff_op
 
 
@@ -74,7 +74,7 @@ class SnapshotBuilder:
 
     def sample(self, stats: ClientStats, t: float) -> Optional[Snapshot]:
         """Returns None for the very first sample (no diff possible yet)."""
-        t0 = time.perf_counter()
+        t0 = perf_s()
         cur = stats.snapshot()
         snap: Optional[Snapshot] = None
         if self._prev is not None:
@@ -99,7 +99,7 @@ class SnapshotBuilder:
             )
             self.history.append(snap)
         self._prev = cur
-        self.snapshot_time_total += time.perf_counter() - t0
+        self.snapshot_time_total += perf_s() - t0
         self.snapshot_count += 1
         return snap
 

@@ -30,6 +30,10 @@ import time
 import traceback
 from typing import Optional
 
+# caratlint: disable-file=CL007 — CLI entry point: prints compile/memory
+# reports to the terminal and times wall-clock compiles outside any fleet
+
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -12,6 +12,9 @@ from __future__ import annotations
 import argparse
 import time
 
+# caratlint: disable-file=CL007 — CLI entry point: terminal progress
+# lines and wall-clock step timing outside any fleet
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core.runtime.telemetry.recorder import active as _telemetry
 from repro.utils.logging import get_logger
 
 log = get_logger("runtime.ft")
@@ -53,7 +54,16 @@ class HeartbeatTracker:
         self._interval: Dict[object, int] = {}
 
     def beat(self, peer: object, interval: Optional[int] = None) -> None:
-        self._last[peer] = self._clock()
+        now = self._clock()
+        rec = _telemetry()
+        if rec.enabled:
+            rec.count("bus.heartbeats")
+            prev = self._last.get(peer)
+            if prev is not None:
+                # bucket to 10 ms so the gap histogram stays small under
+                # heartbeat storms
+                rec.hist("bus.heartbeat_gap_s", round(now - prev, 2))
+        self._last[peer] = now
         if interval is not None:
             self._interval[peer] = int(interval)
 

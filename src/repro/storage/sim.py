@@ -41,6 +41,20 @@ from repro.storage.soa import DemandBatch, PlanBatch, SoAClientView, SoACore
 from repro.storage.workloads import WorkloadSpec
 from repro.utils.rng import RngStream
 
+# telemetry is imported lazily: ``repro.core.__init__`` eagerly pulls
+# in the policy stack, which imports back into ``repro.storage`` — a
+# module-level ``from repro.core.runtime.telemetry...`` here would
+# close that cycle during ``import repro.storage``.
+_telem_active = None
+
+
+def _telemetry():
+    global _telem_active
+    if _telem_active is None:
+        from repro.core.runtime.telemetry.recorder import active
+        _telem_active = active
+    return _telem_active()
+
 # per-client controller callback: (client, t, dt) -> None; may call
 # set_rpc_config / set_cache_limit on its own client only (attach via
 # repro.core.policies.PerClientPolicy).
@@ -359,9 +373,10 @@ class Simulation:
         Scalar backend: a list of per-client ``Plan`` objects. SoA
         backend: one :class:`PlanBatch` covering the subset.
         """
-        if self.core is not None:
-            return self.core.plan(self._indices_of(clients), t, dt)
-        return [c.plan(t, dt, self.p.n_osts) for c in clients]
+        with _telemetry().span("plan", cat="sim"):
+            if self.core is not None:
+                return self.core.plan(self._indices_of(clients), t, dt)
+            return [c.plan(t, dt, self.p.n_osts) for c in clients]
 
     def resolve_phase(self, plans: object, dt: float) -> ClusterFeedback:
         """The globally-coupled phase: all offered demands meet the shared
@@ -370,25 +385,28 @@ class Simulation:
         one ``PlanBatch``, a sequence of ``PlanBatch`` shards (merged
         back into canonical order by demand ordinal), or the scalar list
         of ``Plan`` objects."""
-        if isinstance(plans, PlanBatch):
-            return self.cluster.resolve_batch(plans.demand_batch(), dt)
-        plans = list(plans)
-        if plans and isinstance(plans[0], PlanBatch):
-            batch = DemandBatch.merge([pb.demand_batch() for pb in plans])
-            return self.cluster.resolve_batch(batch, dt)
-        demands = [d for pl in plans for d in pl.all_demands()]
-        return self.cluster.resolve(demands, dt)
+        with _telemetry().span("resolve", cat="sim"):
+            if isinstance(plans, PlanBatch):
+                return self.cluster.resolve_batch(plans.demand_batch(), dt)
+            plans = list(plans)
+            if plans and isinstance(plans[0], PlanBatch):
+                batch = DemandBatch.merge([pb.demand_batch()
+                                           for pb in plans])
+                return self.cluster.resolve_batch(batch, dt)
+            demands = [d for pl in plans for d in pl.all_demands()]
+            return self.cluster.resolve(demands, dt)
 
     def commit_phase(self, clients: Sequence[IOClient],
                      plans: object, fb: ClusterFeedback,
                      dt: float) -> None:
         """Per-client commit of resolved feedback (independent)."""
-        if isinstance(plans, PlanBatch):
-            scale_arr, waits_arr = fb.as_arrays(self.p.n_osts)
-            self.core.commit(plans, scale_arr, waits_arr, dt)
-            return
-        for client, plan in zip(clients, plans):
-            client.commit(plan, fb.scale, fb.waits, dt)
+        with _telemetry().span("commit", cat="sim"):
+            if isinstance(plans, PlanBatch):
+                scale_arr, waits_arr = fb.as_arrays(self.p.n_osts)
+                self.core.commit(plans, scale_arr, waits_arr, dt)
+                return
+            for client, plan in zip(clients, plans):
+                client.commit(plan, fb.scale, fb.waits, dt)
 
     def step(self) -> None:
         dt = self.interval_s

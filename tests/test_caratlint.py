@@ -41,10 +41,12 @@ def fixture_config() -> LintConfig:
             "CL004": [f"{FIXDIR}/cl004_bad.py"],
             "CL005": [f"{FIXDIR}/cl005_bad.py"],
             "CL006": [f"{FIXDIR}/cl006_bad.py"],
+            "CL007": [f"{FIXDIR}/cl007_bad.py"],
         },
         cl001_allowed=[],
         cl002_entries=["cl002_pkg.entry"],
         cl002_allowed=[],
+        cl007_allowed=[],
     )
 
 
@@ -65,6 +67,7 @@ def lint_fixture(path: str):
     (f"{FIXDIR}/cl003_bad.py", "CL003", 1),
     (f"{FIXDIR}/cl004_bad.py", "CL004", 1),
     (f"{FIXDIR}/cl006_bad.py", "CL006", 1),
+    (f"{FIXDIR}/cl007_bad.py", "CL007", 1),
 ])
 def test_rule_fires_on_markers_and_respects_suppressions(
         fixture, code, n_suppressed):
@@ -241,7 +244,8 @@ def test_fixtures_are_excluded_from_repo_runs():
 
 def test_rule_catalogue_complete():
     codes = [r.code for r in RULES]
-    assert codes == ["CL001", "CL002", "CL003", "CL004", "CL005", "CL006"]
+    assert codes == ["CL001", "CL002", "CL003", "CL004", "CL005", "CL006",
+                     "CL007"]
     for rule in RULES:
         assert rule.name and rule.contract
 

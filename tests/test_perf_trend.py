@@ -139,6 +139,51 @@ def test_main_globs_reports_and_handles_none(bench_repo, capsys):
     assert "BENCH_b.json" in err and "BENCH_a.json" not in err
 
 
+def test_noise_class_widens_threshold(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_async.json", {
+        "_noise": {"async_runs[*].cadence_*_ms": 1.0},
+        "async_runs": [{"cadence_plain_ms": 10.0}],
+        "ms_solid": 10.0})
+    Path("BENCH_async.json").write_text(json.dumps({
+        "async_runs": [{"cadence_plain_ms": 18.0}],   # +80% < 1.0 noise thr
+        "ms_solid": 18.0}))                           # +80% > 0.2 default
+    rows, regressions = perf_trend.compare("BENCH_async.json", 0.2)
+    assert len(regressions) == 1
+    assert "ms_solid" in regressions[0]
+    # both metrics still reported as rows
+    assert any("cadence_plain_ms" in name for name, _, _ in rows)
+
+
+def test_noise_class_null_skips_metric(bench_repo):
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_async.json", {
+        "_noise": {"async_runs[*].injected_delay_ms": None},
+        "async_runs": [{"injected_delay_ms": 40.0}]})
+    Path("BENCH_async.json").write_text(json.dumps({
+        "async_runs": [{"injected_delay_ms": 400.0}]}))  # 10x — but skipped
+    rows, regressions = perf_trend.compare("BENCH_async.json", 0.2)
+    assert regressions == []
+    assert any("noise class: skipped" in detail for _, detail, _ in rows)
+
+
+def test_noise_map_read_from_committed_baseline_not_working_tree(bench_repo):
+    """A regressing change must not relax its own gates: the working
+    copy's _noise is ignored; only the HEAD mapping applies."""
+    _, commit_baseline = bench_repo
+    commit_baseline("BENCH_x.json", {"ms_x": 10.0})
+    Path("BENCH_x.json").write_text(json.dumps({
+        "_noise": {"ms_x": None}, "ms_x": 30.0}))
+    _, regressions = perf_trend.compare("BENCH_x.json", 0.2)
+    assert len(regressions) == 1
+
+
+def test_noise_key_itself_is_not_a_metric():
+    got = list(perf_trend._flatten(
+        {"_noise": {"cadence_ms": 5.0}, "ms_a": 1.0}))
+    assert got == [("ms_a", "time", 1.0)]
+
+
 def test_corrupt_committed_baseline_is_skipped(bench_repo):
     _, commit_baseline = bench_repo
     path = commit_baseline("BENCH_bad.json", {"ms_x": 10.0})

@@ -14,6 +14,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_tuner import CacheDemand
 from repro.core.runtime.bus import BusMessage
+from repro.core.runtime.telemetry.clock import Clock
+from repro.core.runtime.telemetry.events import (CounterEvent, EventBatch,
+                                                 SpanEvent)
+from repro.core.runtime.telemetry.recorder import Recorder
 from repro.core.runtime.transport import (WireError, assert_wire_safe,
                                           from_wire, to_wire)
 from repro.storage.client import ChannelDemand
@@ -217,3 +221,79 @@ def test_assert_wire_safe():
     assert_wire_safe((1, "ok", [2.0], {"k": b"blob"}))
     with pytest.raises(WireError):
         assert_wire_safe({"inner": threading.Lock()})
+
+
+# ------------------------------------------------ telemetry event batches
+NAME = st.sampled_from(["plan", "resolve", "policy.decide", "bus.rpc_ms"])
+SEC = st.floats(min_value=0.0, max_value=1e6)
+IVAL = st.integers(min_value=-1, max_value=2**20)
+
+
+def _span_events():
+    return st.tuples(
+        NAME, st.sampled_from(["sim", "policy", "bus", ""]),
+        SEC, st.floats(min_value=0.0, max_value=10.0), IVAL,
+    ).map(lambda t: SpanEvent(*t))
+
+
+def _counter_events():
+    return st.tuples(
+        NAME, SEC, st.floats(min_value=-1e9, max_value=1e9), IVAL,
+        st.sampled_from(["count", "gauge"]),
+    ).map(lambda t: CounterEvent(*t))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_span_events())
+def test_span_event_round_trip(ev):
+    back = _rt(ev)
+    assert back == ev and type(back) is SpanEvent
+
+
+@settings(max_examples=30, deadline=None)
+@given(_counter_events())
+def test_counter_event_round_trip(ev):
+    back = _rt(ev)
+    assert back == ev and type(back) is CounterEvent
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(_span_events(), max_size=4).map(tuple),
+       st.lists(_counter_events(), max_size=4).map(tuple),
+       st.floats(min_value=-1.0, max_value=1.0),
+       st.integers(min_value=0, max_value=1000))
+def test_event_batch_round_trip(spans, counters, offset, dropped):
+    batch = EventBatch(
+        source="w3", clock_offset_s=offset, spans=spans,
+        counters=counters, dropped=dropped,
+        metrics={"counters": {"bus.published": 12.0},
+                 "gauges": {"queue_depth": 3.0},
+                 "hists": {"bus.staleness_at_delivery": {0.0: 9, 1.0: 2}}})
+    back = _rt(batch)
+    assert back == batch and type(back) is EventBatch
+    assert type(back.spans) is tuple and type(back.counters) is tuple
+    for orig, rt in zip(batch.spans, back.spans):
+        assert type(rt) is SpanEvent and rt == orig
+
+
+def test_drained_recorder_batch_round_trips():
+    # the real producer path: record through a Recorder, drain, wire it
+    rec = Recorder(source="w0", capacity=64)
+    with rec.span("plan", cat="sim"):
+        pass
+    rec.count("bus.published", 3)
+    rec.hist("bus.rpc_ms", 0.2)
+    rec.set_interval(1)                 # flushes the dirty counter
+    batch = rec.drain()
+    assert _rt(batch) == batch
+
+
+def test_live_recorder_and_clock_rejected():
+    # only drained data travels: the live objects are deliberately
+    # unregistered — a recorder in a payload would drag its lock along
+    with pytest.raises(WireError):
+        to_wire(Recorder(source="w0", capacity=8))
+    with pytest.raises(WireError):
+        to_wire(Clock())
+    with pytest.raises(WireError):
+        to_wire(("telem", {"rec": Recorder(source="x", capacity=8)}))

@@ -49,6 +49,9 @@ class LintConfig:
         # scoped to the package: tests/benches deliberately publish live
         # objects to exercise the runtime WireError twin
         "CL006": ["src/repro/*.py"],
+        # clocks/reporting flow through telemetry (CONTRIBUTING.md
+        # §CL007); scoped to the package: tests/benches print freely
+        "CL007": ["src/repro/*.py"],
     })
 
     # ---- CL001 rng-discipline -------------------------------------------
@@ -66,10 +69,23 @@ class LintConfig:
         "repro.core",
         "repro.core.policies",
         "repro.core.runtime",
+        # the lazy (PEP 562) runtime __init__ contributes no import
+        # edges, so the submodules it fronts are entries of their own
+        "repro.core.runtime.sharded",
+        "repro.core.runtime.telemetry",
     ])
     # modules explicitly allowed to import jax at module level even if
     # reachable from an entry (none today: reachable modules go lazy)
     cl002_allowed: List[str] = field(default_factory=list)
+
+    # ---- CL007 telemetry-hygiene ----------------------------------------
+    # the sanctioned raw-time module (it *wraps* time.time/perf_counter)
+    # and the exporters that legitimately write to files/terminals
+    cl007_allowed: List[str] = field(default_factory=lambda: [
+        "src/repro/core/runtime/telemetry/clock.py",
+        "src/repro/core/runtime/telemetry/export.py",
+        "src/repro/core/runtime/telemetry/flight.py",
+    ])
 
     # ---- CL005 policy protocol ------------------------------------------
     # the protocol base class providing the default split-lifecycle
@@ -88,6 +104,9 @@ class LintConfig:
 
     def cl001_is_allowed(self, relpath: str) -> bool:
         return _match_any(relpath, self.cl001_allowed)
+
+    def cl007_is_allowed(self, relpath: str) -> bool:
+        return _match_any(relpath, self.cl007_allowed)
 
 
 def default_config() -> LintConfig:

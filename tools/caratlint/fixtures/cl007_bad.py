@@ -1,0 +1,39 @@
+"""Seeded CL007 violations: raw clocks and print() outside telemetry."""
+import time
+from time import perf_counter
+from time import time as wallclock
+
+from repro.core.runtime.telemetry.clock import perf_s, wall_s
+from repro.core.runtime.telemetry.recorder import active
+
+
+class ShardStep:
+    # ------------------------------------------------------- clean timing
+    def good(self, work):
+        t0 = perf_s()
+        work()
+        active().hist("step_ms", (perf_s() - t0) * 1e3)
+        active().gauge("wall_anchor_s", wall_s())
+        deadline = time.monotonic() + 5.0       # deadlines are control flow
+        time.sleep(0.0)                         # pacing too
+        return deadline
+
+    # --------------------------------------------------------- raw clocks
+    def bad_wall(self):
+        return time.time()                  # VIOLATION: bare time.time
+
+    def bad_perf(self):
+        return time.perf_counter()          # VIOLATION: bare perf_counter
+
+    def bad_from_import(self):
+        return perf_counter()               # VIOLATION: aliased perf_counter
+
+    def bad_aliased_wall(self):
+        return wallclock()                  # VIOLATION: aliased time.time
+
+    # ------------------------------------------------------ raw reporting
+    def bad_print(self, stats):
+        print("step done", stats)           # VIOLATION: bare print
+
+    def suppressed(self):
+        print("debug")                      # caratlint: disable=CL007

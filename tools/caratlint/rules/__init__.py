@@ -6,6 +6,7 @@ from tools.caratlint.rules.cl003_floatorder import FloatOrderContractRule
 from tools.caratlint.rules.cl004_jit import JitHygieneRule
 from tools.caratlint.rules.cl005_policy import PolicyProtocolRule
 from tools.caratlint.rules.cl006_buspurity import BusPayloadPurityRule
+from tools.caratlint.rules.cl007_telemetry import TelemetryHygieneRule
 
 RULES = [
     RngDisciplineRule(),
@@ -14,6 +15,7 @@ RULES = [
     JitHygieneRule(),
     PolicyProtocolRule(),
     BusPayloadPurityRule(),
+    TelemetryHygieneRule(),
 ]
 
 __all__ = ["Finding", "Rule", "RULES"]

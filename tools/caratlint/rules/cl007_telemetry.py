@@ -1,0 +1,77 @@
+"""CL007 telemetry-hygiene: clocks and reporting flow through telemetry.
+
+The runtime's spans, counters, and cross-worker clock-offset estimates
+are only comparable because every timestamp comes from one place:
+``repro.core.runtime.telemetry.clock`` (``perf_s``/``wall_s``/``Clock``,
+the sanctioned wrappers around ``time.perf_counter``/``time.time``). A
+bare ``time.time()`` or ``time.perf_counter()`` elsewhere in the
+package produces timestamps the exporters cannot skew-normalize, and a
+bare ``print()`` is invisible reporting — it bypasses the ring buffers,
+never reaches the flight recorder, and corrupts worker stdout that the
+fleet protocol may be using. This rule keeps both on the blessed path.
+
+Flagged in scope (``src/repro/`` outside the allowlisted telemetry
+clock/exporter modules):
+
+* calls resolving to ``time.time`` or ``time.perf_counter`` (aliased
+  imports included: ``from time import perf_counter`` is caught);
+* bare ``print(...)`` calls.
+
+``time.monotonic()``/``time.sleep()`` are deliberately NOT flagged:
+deadlines and pacing are control flow, not measurement — they never
+ride an event and need no skew normalization. CLI entry points that
+legitimately talk to a terminal carry a file-level suppression
+(``# caratlint: disable-file=CL007``) so the exception is visible in
+the file itself. See CONTRIBUTING.md §CL007 for the catalogue entry.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.caratlint.rules.base import Finding, ImportMap, Rule, attr_chain
+
+_FORBIDDEN_TIME = {"time.time", "time.perf_counter"}
+_HINT = ("read clocks via repro.core.runtime.telemetry.clock "
+         "(perf_s/wall_s/Clock) and report via recorder spans/counters "
+         "or an exporter; see CONTRIBUTING.md CL007")
+
+
+class TelemetryHygieneRule(Rule):
+    code = "CL007"
+    name = "telemetry-hygiene"
+    contract = ("runtime code reads clocks through telemetry.clock and "
+                "reports through recorders/exporters — no bare "
+                "time.time()/time.perf_counter()/print()")
+
+    def check(self, project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files_for(self.code):
+            if project.config.cl007_is_allowed(sf.relpath):
+                continue
+            imports = ImportMap.of(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._violation(node, imports)
+                if msg:
+                    findings.append(Finding(
+                        code=self.code, path=sf.relpath, line=node.lineno,
+                        end_line=node.end_lineno or node.lineno,
+                        message=f"{msg} — {_HINT}"))
+        return findings
+
+    @staticmethod
+    def _violation(call: ast.Call, imports: ImportMap) -> str:
+        if isinstance(call.func, ast.Name) and call.func.id == "print" \
+                and "print" not in imports.aliases:
+            return ("bare print() bypasses the telemetry ring buffers "
+                    "and pollutes worker stdout")
+        chain = attr_chain(call.func)
+        if chain is None or chain.split(".")[0] not in imports.aliases:
+            return ""
+        target = imports.resolve(chain)
+        if target in _FORBIDDEN_TIME:
+            return (f"bare {target}() produces timestamps the exporters "
+                    f"cannot skew-normalize")
+        return ""
